@@ -1,0 +1,51 @@
+"""Fig. 13: the technique on other backbones — the paper's VGG11 /
+MobileNetV2 plus two assigned transformer archs (the lifted scenario)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.cnn import CNN_FACTORY
+from repro.core.split import (cnn_jalad_table, cnn_split_table,
+                              transformer_split_table)
+from repro.env.mecenv import MECEnv, make_env_params
+from repro.rl.baselines import local_policy_eval
+from repro.rl.mahppo import MAHPPOConfig, evaluate_policy, train_mahppo
+
+
+def _one(plan, *, iters, beta=0.47, n_ue=5, t0=0.5):
+    env = MECEnv(make_env_params(plan, n_ue=n_ue, n_channels=2, t0=t0,
+                                 beta=beta))
+    cfg = MAHPPOConfig(iterations=iters, horizon=1024, n_envs=8)
+    agent, hist = train_mahppo(env, cfg, seed=0)
+    ev = evaluate_policy(env, agent, frames=64)
+    lo = local_policy_eval(env, frames=64)
+    return {
+        "final_reward": float(np.mean([h["reward_mean"] for h in hist[-5:]])),
+        "t_ms": 1e3 * ev["t_task"], "e_mJ": 1e3 * ev["e_task"],
+        "local_t_ms": 1e3 * lo["t_task"], "local_e_mJ": 1e3 * lo["e_task"],
+    }
+
+
+def run(quick=True):
+    iters = 50 if quick else 200
+    rows = {}
+    for name in ("vgg11", "mobilenetv2"):
+        plan = cnn_split_table(CNN_FACTORY[name](101), 224)
+        rows[name] = _one(plan, iters=iters)
+        jplan = cnn_jalad_table(CNN_FACTORY[name](101), 224)
+        rows[name + "-jalad"] = _one(jplan, iters=iters, t0=3.0)
+    # assigned transformer archs: edge-serving of LLM prefixes. t0 scaled to
+    # ~10x a full local inference (paper's rule); beta = latency/energy ratio.
+    for arch in ("qwen3-1.7b", "mamba2-1.3b"):
+        plan = transformer_split_table(get_config(arch))
+        t_full = float(plan.t_local[-1])
+        e_full = float(plan.e_local[-1])
+        rows[arch] = _one(plan, iters=iters, t0=round(10 * t_full, 1),
+                          beta=t_full / max(e_full, 1e-9))
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    for k, v in run()["rows"].items():
+        print(k, {kk: round(vv, 3) for kk, vv in v.items()})

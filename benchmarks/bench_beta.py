@@ -1,0 +1,30 @@
+"""Fig. 12: impact of the latency/energy trade-off hyperparameter beta."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cnn import make_resnet18
+from repro.core.split import cnn_split_table
+from repro.env.mecenv import MECEnv, make_env_params
+from repro.rl.mahppo import MAHPPOConfig, evaluate_policy, train_mahppo
+
+
+def run(quick=True, betas=None):
+    iters = 50 if quick else 150
+    betas = betas or ((0.01, 1.0, 100.0) if quick
+                      else (0.01, 0.1, 1.0, 10.0, 100.0, 1000.0))
+    plan = cnn_split_table(make_resnet18(101), 224)
+    rows = []
+    for beta in betas:
+        env = MECEnv(make_env_params(plan, n_ue=5, n_channels=2, beta=beta))
+        cfg = MAHPPOConfig(iterations=iters, horizon=1024, n_envs=8)
+        agent, _ = train_mahppo(env, cfg, seed=0)
+        ev = evaluate_policy(env, agent, frames=64)
+        rows.append({"beta": beta, "t_ms": 1e3 * ev["t_task"],
+                     "e_mJ": 1e3 * ev["e_task"]})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    for r in run()["rows"]:
+        print(r)

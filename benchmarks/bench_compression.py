@@ -1,0 +1,129 @@
+"""Fig. 4 + Fig. 5: compression rate of the AE compressor vs JALAD at the 4
+ResNet18 partitioning points, and the xi ablation.
+
+Offline stand-in for Caltech-101: procedural 101-class images (see
+repro.data.synthetic); ResNet18 at width 0.5 / 32px for CPU budget. For each
+split point we train AEs at increasing channel-reduction ratios and report
+the best rate whose fine-tuned accuracy stays within 2% of the no-AE
+baseline (the paper's selection rule), alongside JALAD's entropy-rate.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cnn as cnn_lib
+from repro.core.compressor import (accuracy_with_ae, compression_rate,
+                                   train_autoencoder)
+from repro.core.jalad import jalad_compress_size_bits
+from repro.data.synthetic import synthetic_image_batch
+
+IMG, NCLS, WIDTH = 32, 101, 0.5
+
+
+def _data_iter(batch=32, seed0=0):
+    k = seed0
+    while True:
+        yield synthetic_image_batch(jax.random.PRNGKey(k), batch, IMG, NCLS)
+        k += 1
+
+
+def _pretrain_backbone(model, steps=60):
+    from repro.optim import adamw_init, adamw_update
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+
+    def loss(p, x, y):
+        logits = cnn_lib.forward(model, p, x)
+        lse = jax.nn.logsumexp(logits, -1)
+        tgt = jnp.take_along_axis(logits, y[:, None], -1)[:, 0]
+        return jnp.mean(lse - tgt)
+
+    @jax.jit
+    def step(p, o, x, y):
+        l, g = jax.value_and_grad(loss)(p, x, y)
+        p, o = adamw_update(g, o, p, 3e-3, weight_decay=0.0)
+        return p, o, l
+
+    it = _data_iter()
+    for _ in range(steps):
+        x, y = next(it)
+        params, opt, l = step(params, opt, x, y)
+    return params
+
+
+def _accuracy(model, params, n_batches=4):
+    accs = []
+    for s in range(n_batches):
+        x, y = synthetic_image_batch(jax.random.PRNGKey(10_000 + s), 64, IMG,
+                                     NCLS)
+        logits = cnn_lib.forward(model, params, x)
+        accs.append(float(jnp.mean((jnp.argmax(logits, -1) == y))))
+    return float(np.mean(accs))
+
+
+def run(quick=True):
+    model = cnn_lib.make_resnet18(NCLS, width=WIDTH)
+    t0 = time.time()
+    bb = _pretrain_backbone(model, steps=150 if quick else 400)
+    base_acc = _accuracy(model, bb)
+    rows = []
+    shapes = model.feature_shapes(IMG)
+    ae_steps = 30 if quick else 150
+    ratios = (4, 8, 16) if quick else (2, 4, 8, 16, 32)
+    for pi, k in enumerate(model.split_after):
+        ch = shapes[k][0]
+        best_rate, best_acc = 4.0, base_acc  # quant-only fallback R=32/8
+        for rc in ratios:
+            chp = max(1, ch // rc)
+            ae, _, _ = train_autoencoder(
+                jax.random.PRNGKey(pi * 10 + rc), model, bb, k,
+                _data_iter(seed0=500 + pi), ch=ch, ch_prime=chp,
+                steps=ae_steps, lr=3e-3)
+            x, y = synthetic_image_batch(jax.random.PRNGKey(20_000 + pi), 64,
+                                         IMG, NCLS)
+            acc = float(accuracy_with_ae(model, bb, ae, k, x, y, bits=8))
+            rate = compression_rate(ch, chp, 8)
+            if acc >= base_acc - 0.02 and rate > best_rate:
+                best_rate, best_acc = rate, acc
+        # JALAD entropy rate on the same feature
+        x, _ = synthetic_image_batch(jax.random.PRNGKey(30_000 + pi), 16, IMG,
+                                     NCLS)
+        feat = cnn_lib.forward(model, bb, x, upto=k + 1)
+        _, jrate = jalad_compress_size_bits(feat, 8)
+        rows.append({"point": pi + 1, "channels": ch,
+                     "ae_rate": float(best_rate), "ae_acc": best_acc,
+                     "jalad_rate": float(jrate), "base_acc": base_acc})
+    return {"rows": rows, "seconds": time.time() - t0}
+
+
+def run_xi_ablation(quick=True):
+    """Fig. 5: xi in {0, 0.01, 0.1, 1.0} at each split point."""
+    model = cnn_lib.make_resnet18(NCLS, width=WIDTH)
+    bb = _pretrain_backbone(model, steps=150 if quick else 400)
+    shapes = model.feature_shapes(IMG)
+    rows = []
+    for pi, k in enumerate(model.split_after[:2] if quick
+                           else model.split_after):
+        ch = shapes[k][0]
+        for xi in (0.0, 0.01, 0.1, 1.0):
+            ae, _, _ = train_autoencoder(
+                jax.random.PRNGKey(42), model, bb, k,
+                _data_iter(seed0=900), ch=ch, ch_prime=max(1, ch // 8),
+                steps=25 if quick else 100, lr=3e-3, xi=xi)
+            x, y = synthetic_image_batch(jax.random.PRNGKey(40_000), 64, IMG,
+                                         NCLS)
+            acc = float(accuracy_with_ae(model, bb, ae, k, x, y, bits=8))
+            rows.append({"point": pi + 1, "xi": xi, "acc": acc})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    out = run()
+    for r in out["rows"]:
+        print(r)
+    for r in run_xi_ablation()["rows"]:
+        print(r)

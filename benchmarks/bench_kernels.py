@@ -1,0 +1,52 @@
+"""Kernel micro-harness: wall time per call (interpret mode on CPU — the
+numbers are correctness-path timings, not TPU perf; TPU perf comes from the
+roofline terms) plus the compressor's analytic TPU-side cost."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def run():
+    rows = []
+    x = jax.random.normal(jax.random.PRNGKey(0), (1024, 2048), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(1), (2048, 512), jnp.bfloat16) * 0.02
+    us = _time(lambda a: ops.quantize(a, -4.0, 4.0), x)
+    # analytic TPU latency: memory bound, read bf16 + write u8
+    tpu_us = (x.size * 3) / HBM_BW * 1e6
+    rows.append({"name": "kernel_quantize_1024x2048", "us_per_call": us,
+                 "derived": f"tpu_roofline_us={tpu_us:.2f}"})
+    us = _time(lambda a, b: ops.bottleneck_encode(a, b, -4.0, 4.0), x, w)
+    fl = 2 * 1024 * 2048 * 512
+    tpu_us = max(fl / PEAK_FLOPS_BF16, (x.size * 2 + w.size * 2) / HBM_BW) * 1e6
+    rows.append({"name": "kernel_bottleneck_1024x2048x512", "us_per_call": us,
+                 "derived": f"tpu_roofline_us={tpu_us:.2f}"})
+    q = jax.random.normal(jax.random.PRNGKey(2), (4, 16, 128))
+    k = jax.random.normal(jax.random.PRNGKey(3), (4, 2048, 2, 128))
+    v = jax.random.normal(jax.random.PRNGKey(4), (4, 2048, 2, 128))
+    pos = jnp.broadcast_to(jnp.arange(2048), (4, 2048))
+    us = _time(lambda a, b, c: ops.decode_attention(a, b, c, pos, 2047),
+               q, k, v)
+    tpu_us = (k.size + v.size) * 4 / HBM_BW * 1e6
+    rows.append({"name": "kernel_decode_attn_b4_s2048", "us_per_call": us,
+                 "derived": f"tpu_roofline_us={tpu_us:.2f}"})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    for r in run()["rows"]:
+        print(r)

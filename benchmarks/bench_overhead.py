@@ -1,0 +1,45 @@
+"""Fig. 7: per-split-point local latency / energy (AE vs JALAD vs full
+local) for the paper's CNNs and the assigned transformer archs."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.cnn import CNN_FACTORY
+from repro.core.split import (cnn_jalad_table, cnn_split_table,
+                              transformer_split_table)
+
+
+def run():
+    rows = []
+    for name in ("resnet18", "vgg11", "mobilenetv2"):
+        model = CNN_FACTORY[name](101)
+        ae = cnn_split_table(model, 224)
+        ja = cnn_jalad_table(model, 224)
+        for b in range(ae.n_actions):
+            rows.append({
+                "backbone": name, "b": b,
+                "t_local_ms": 1e3 * float(ae.t_local[b]),
+                "t_comp_ms": 1e3 * float(ae.t_comp[b]),
+                "e_local_mJ": 1e3 * float(ae.e_local[b] + ae.e_comp[b]),
+                "f_kbits": float(ae.f_bits[b]) / 1e3,
+                "jalad_t_comp_ms": 1e3 * float(ja.t_comp[b]),
+                "jalad_f_kbits": float(ja.f_bits[b]) / 1e3,
+            })
+    for arch in ARCH_IDS:
+        plan = transformer_split_table(get_config(arch))
+        for b in range(plan.n_actions):
+            rows.append({
+                "backbone": arch, "b": b,
+                "t_local_ms": 1e3 * float(plan.t_local[b]),
+                "t_comp_ms": 1e3 * float(plan.t_comp[b]),
+                "e_local_mJ": 1e3 * float(plan.e_local[b] + plan.e_comp[b]),
+                "f_kbits": float(plan.f_bits[b]) / 1e3,
+                "feasible": bool(plan.feasible[b]),
+            })
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    for r in run()["rows"]:
+        print(r)

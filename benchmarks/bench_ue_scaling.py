@@ -1,0 +1,40 @@
+"""Fig. 10 + Fig. 11: convergence and averaged inference overhead vs UE
+number (N = 3..10) on ResNet18."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cnn import make_resnet18
+from repro.core.split import cnn_split_table
+from repro.env.mecenv import MECEnv, make_env_params
+from repro.rl.baselines import local_policy_eval
+from repro.rl.mahppo import MAHPPOConfig, evaluate_policy, train_mahppo
+
+
+def run(quick=True, ue_numbers=None):
+    iters = 60 if quick else 200
+    ue_numbers = ue_numbers or ((3, 5, 8) if quick else tuple(range(3, 11)))
+    plan = cnn_split_table(make_resnet18(101), 224)
+    rows = []
+    for n in ue_numbers:
+        env = MECEnv(make_env_params(plan, n_ue=n, n_channels=2))
+        cfg = MAHPPOConfig(iterations=iters, horizon=1024, n_envs=8)
+        agent, hist = train_mahppo(env, cfg, seed=0)
+        ev = evaluate_policy(env, agent, frames=64)
+        lo = local_policy_eval(env, frames=64)
+        beta = float(env.params.beta)
+        rows.append({
+            "n_ue": n,
+            "final_reward": float(np.mean([h["reward_mean"] for h in hist[-5:]])),
+            "t_ms": 1e3 * ev["t_task"], "e_mJ": 1e3 * ev["e_task"],
+            "local_t_ms": 1e3 * lo["t_task"], "local_e_mJ": 1e3 * lo["e_task"],
+            "overhead": ev["t_task"] + beta * ev["e_task"],
+            "local_overhead": lo["t_task"] + beta * lo["e_task"],
+        })
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    for r in run()["rows"]:
+        print({k: round(v, 4) if isinstance(v, float) else v
+               for k, v in r.items()})

@@ -1,0 +1,62 @@
+"""Analytic MODEL_FLOPS + memory-traffic model per (arch x shape), used by
+the roofline analysis alongside the HLO-derived numbers.
+
+MODEL_FLOPS convention (spec): 6*N*D for dense training, 6*N_active*D for
+MoE; serve: 2*N(_active) per generated/processed token (+attention terms are
+reported separately since they are context-length dependent).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+
+
+def param_counts(cfg: ModelConfig):
+    """(total_params, active_params) from the real parameter tree."""
+    from repro.launch.steps import params_spec
+    pstruct = params_spec(cfg)
+    total = sum(int(l.size) for l in jax.tree_util.tree_leaves(pstruct))
+    active = total
+    if cfg.moe is not None:
+        m = cfg.moe
+        expert_params = 3 * cfg.d_model * m.d_expert  # wi+wg+wo per expert
+        n_moe_layers = sum(1 for b in cfg.block_types() if b == "moe")
+        dead = n_moe_layers * expert_params * (m.n_experts - m.top_k)
+        active = total - dead
+    return total, active
+
+
+def embed_params(cfg: ModelConfig):
+    n = cfg.vocab_size * cfg.d_model
+    return n if cfg.tie_embeddings else 2 * n
+
+
+def model_flops(cfg: ModelConfig, shape_name: str):
+    """Global useful FLOPs of one step."""
+    shape = INPUT_SHAPES[shape_name]
+    total, active = param_counts(cfg)
+    emb = embed_params(cfg)
+    body = active - emb
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * body * tokens + 2.0 * tokens * cfg.d_model * cfg.vocab_size * 3
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * body * tokens + 2.0 * shape.global_batch * cfg.d_model * cfg.vocab_size
+    # decode: one token per sequence
+    tokens = shape.global_batch
+    return 2.0 * body * tokens + 2.0 * tokens * cfg.d_model * cfg.vocab_size
+
+
+def memory_bytes_per_device(rec: dict, shape_name: str):
+    """Roofline memory traffic per device per step, from dry-run sizes:
+    decode: params + cache read once; train: params read(fwd+bwd) + grads
+    written + opt state read+write; prefill: params + cache written."""
+    shape = INPUT_SHAPES[shape_name]
+    p = rec.get("param_bytes_per_device", 0)
+    if shape.kind == "train":
+        o = rec.get("opt_bytes_per_device", 0)
+        return 3.0 * p + 2.0 * o
+    c = rec.get("cache_bytes_per_device", 0)
+    return p + c

@@ -1,0 +1,134 @@
+"""Roofline analysis (deliverable g): per (arch x shape x mesh), the three
+terms derived from the dry-run compiled artifacts:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s          (197 TF bf16, v5e)
+  memory     = traffic_bytes_per_device / HBM_bw           (819 GB/s)
+  collective = collective_bytes_per_device / link_bw       (~50 GB/s ICI)
+
+HLO_FLOPs uses the while-trip-count-weighted dot parse (launch/hloanalysis);
+the MODEL_FLOPS / HLO_FLOPs ratio exposes remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import costmodel
+from repro.configs import get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def load_records(art_dir="artifacts/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_row(rec):
+    arch, shape = rec["arch"], rec["shape"]
+    cfg = get_config(arch)
+    n_dev = rec["n_devices"]
+    hlo_flops = rec.get("hlo_dot_flops") or rec.get(
+        "cost_analysis", {}).get("flops", 0.0)
+    coll = rec.get("collectives_weighted") or rec.get("collectives", {})
+    # ring-cost moved bytes when available (group-size aware); for older
+    # artifacts estimate from per-type result-byte totals with n=16 groups
+    coll_bytes = coll.get("moved_bytes")
+    if coll_bytes is None:
+        f = 15.0 / 16.0
+        coll_bytes = (2 * f * coll.get("all-reduce", 0)
+                      + f * coll.get("all-gather", 0)
+                      + 15.0 * coll.get("reduce-scatter", 0)
+                      + f * coll.get("all-to-all", 0)
+                      + coll.get("collective-permute", 0))
+
+    t_compute = hlo_flops / PEAK_FLOPS_BF16
+    mem_bytes = costmodel.memory_bytes_per_device(rec, shape)
+    t_memory = mem_bytes / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+
+    mf_global = costmodel.model_flops(cfg, shape)
+    mf_per_dev = mf_global / n_dev
+    ratio = mf_per_dev / hlo_flops if hlo_flops else 0.0
+
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    return {
+        "arch": arch, "shape": shape, "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "hlo_flops_per_dev": hlo_flops,
+        "model_flops_per_dev": mf_per_dev,
+        "useful_ratio": ratio,
+        "coll_bytes_per_dev": coll_bytes,
+        "mem_bytes_per_dev": mem_bytes,
+        "param_bytes_per_dev": rec.get("param_bytes_per_device", 0),
+        "peak_hbm_frac": (rec.get("param_bytes_per_device", 0)
+                          + rec.get("opt_bytes_per_device", 0)
+                          + rec.get("cache_bytes_per_device", 0)) / 16e9,
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def full_table(art_dir="artifacts/dryrun", mesh=None):
+    rows = [roofline_row(r) for r in load_records(art_dir)]
+    if mesh:
+        rows = [r for r in rows if r["mesh"] == mesh]
+    return rows
+
+
+def print_table(rows):
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':8s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+           f"{'dominant':>10s} {'useful':>7s} {'hbm_frac':>8s}")
+    print(hdr)
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+              f"{r['t_compute_s']:10.2e} {r['t_memory_s']:10.2e} "
+              f"{r['t_collective_s']:10.2e} {r['dominant']:>10s} "
+              f"{r['useful_ratio']:7.2f} {r['peak_hbm_frac']:8.2f}")
+
+
+def default_art_dir():
+    return ("artifacts/dryrun_opt" if os.path.isdir("artifacts/dryrun_opt")
+            and glob.glob("artifacts/dryrun_opt/*.json")
+            else "artifacts/dryrun")
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=None)
+    ap.add_argument("--baseline-dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    art = args.dir or default_art_dir()
+    rows = full_table(art)
+    print(f"== roofline from {art}")
+    print_table(rows)
+    out = "artifacts/roofline.json"
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\nwrote {out} ({len(rows)} rows)")
+    # baseline-vs-optimized collective comparison
+    if art != args.baseline_dir and os.path.isdir(args.baseline_dir):
+        base = {(r["arch"], r["shape"], r["mesh"]): r
+                for r in full_table(args.baseline_dir)}
+        print("\n== collective term: baseline -> optimized (single-pod)")
+        for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+            if r["mesh"] != "16x16":
+                continue
+            b = base.get((r["arch"], r["shape"], r["mesh"]))
+            if not b or not b["t_collective_s"]:
+                continue
+            ratio = b["t_collective_s"] / max(r["t_collective_s"], 1e-12)
+            print(f"{r['arch']:24s} {r['shape']:12s} "
+                  f"{b['t_collective_s']:9.2e} -> {r['t_collective_s']:9.2e} "
+                  f"({ratio:7.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""Benchmark harness entrypoint — one section per paper table/figure plus
+the roofline analysis. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only SECTION]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+
+def _emit(name, us, derived):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _section(name):
+    print(f"# --- {name} ---", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale RL iteration counts (slow)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+    results = {}
+
+    def want(s):
+        return args.only is None or args.only == s
+
+    print("name,us_per_call,derived")
+
+    if want("kernels"):
+        _section("kernels (interpret-mode timing + TPU roofline)")
+        from benchmarks import bench_kernels
+        out = bench_kernels.run()
+        results["kernels"] = out
+        for r in out["rows"]:
+            _emit(r["name"], r["us_per_call"], r["derived"])
+
+    if want("compression"):
+        _section("fig4/5 compression (AE vs JALAD, xi ablation)")
+        from benchmarks import bench_compression
+        t0 = time.time()
+        out = bench_compression.run(quick=quick)
+        results["compression"] = out
+        per = (time.time() - t0) * 1e6 / max(len(out["rows"]), 1)
+        for r in out["rows"]:
+            _emit(f"fig4_point{r['point']}", per,
+                  f"ae_rate={r['ae_rate']:.0f};jalad_rate={r['jalad_rate']:.1f};"
+                  f"acc={r['ae_acc']:.3f};base={r['base_acc']:.3f}")
+        xi = bench_compression.run_xi_ablation(quick=quick)
+        results["xi"] = xi
+        for r in xi["rows"]:
+            _emit(f"fig5_point{r['point']}_xi{r['xi']}", 0.0,
+                  f"acc={r['acc']:.3f}")
+
+    if want("overhead"):
+        _section("fig7 overhead tables")
+        from benchmarks import bench_overhead
+        out = bench_overhead.run()
+        results["overhead"] = out
+        for r in out["rows"]:
+            if r["backbone"] in ("resnet18", "qwen3-1.7b"):
+                _emit(f"fig7_{r['backbone']}_b{r['b']}", 0.0,
+                      f"t_ms={r['t_local_ms']:.1f};e_mJ={r['e_local_mJ']:.1f};"
+                      f"f_kbits={r['f_kbits']:.0f}")
+
+    if want("convergence"):
+        _section("fig8 convergence (MAHPPO vs local vs JALAD)")
+        from benchmarks import bench_convergence
+        t0 = time.time()
+        out = bench_convergence.run(quick=quick)
+        results["convergence"] = out
+        iters = len(out["mahppo_curve"])
+        us = (time.time() - t0) * 1e6 / max(iters, 1)
+        _emit("fig8_mahppo_final_reward", us,
+              f"{np.mean(out['mahppo_curve'][-5:]):.4f}")
+        # JALAD runs at T0=3s (paper relaxation); per-frame rewards are
+        # throughput-normalized by the reward definition, so raw values
+        # compare directly (more negative = worse).
+        _emit("fig8_jalad_final_reward", us,
+              f"{np.mean(out['jalad_curve'][-5:]):.4f}")
+        ev = out["eval"]
+        _emit("fig8_eval_t_ms", us,
+              f"mahppo={1e3*ev['mahppo']['t_task']:.1f};"
+              f"local={1e3*ev['local']['t_task']:.1f}")
+        _emit("fig8_eval_e_mJ", us,
+              f"mahppo={1e3*ev['mahppo']['e_task']:.1f};"
+              f"local={1e3*ev['local']['e_task']:.1f}")
+        for name, r in out.get("refs", {}).items():
+            _emit(f"fig8_ref_{name}", 0.0,
+                  f"t_ms={1e3*r['t_task']:.1f};e_mJ={1e3*r['e_task']:.1f};"
+                  f"overhead={r['overhead']:.4f}")
+
+    if want("hparams"):
+        _section("fig9 hyperparameter sweeps (lr / reuse / memory)")
+        from benchmarks import bench_convergence
+        t0 = time.time()
+        out = bench_convergence.run_hparams(quick=quick)
+        results["hparams"] = out
+        us = (time.time() - t0) * 1e6 / max(len(out), 1)
+        for k, v in out.items():
+            _emit(f"fig9_{k}", us, f"final_reward={v:.4f}")
+
+    if want("scaling"):
+        _section("fig10/11 UE-number scaling")
+        from benchmarks import bench_ue_scaling
+        t0 = time.time()
+        out = bench_ue_scaling.run(quick=quick)
+        results["scaling"] = out
+        us = (time.time() - t0) * 1e6 / max(len(out["rows"]), 1)
+        for r in out["rows"]:
+            _emit(f"fig11_n{r['n_ue']}", us,
+                  f"t_ms={r['t_ms']:.1f};e_mJ={r['e_mJ']:.1f};"
+                  f"local_t={r['local_t_ms']:.1f};local_e={r['local_e_mJ']:.1f};"
+                  f"overhead={r['overhead']:.4f};local_ovh={r['local_overhead']:.4f}")
+
+    if want("beta"):
+        _section("fig12 beta trade-off")
+        from benchmarks import bench_beta
+        t0 = time.time()
+        out = bench_beta.run(quick=quick)
+        results["beta"] = out
+        us = (time.time() - t0) * 1e6 / max(len(out["rows"]), 1)
+        for r in out["rows"]:
+            _emit(f"fig12_beta{r['beta']}", us,
+                  f"t_ms={r['t_ms']:.1f};e_mJ={r['e_mJ']:.1f}")
+
+    if want("archs"):
+        _section("fig13 other backbones (+ assigned archs)")
+        from benchmarks import bench_archs
+        t0 = time.time()
+        out = bench_archs.run(quick=quick)
+        results["archs"] = out
+        us = (time.time() - t0) * 1e6 / max(len(out["rows"]), 1)
+        for k, v in out["rows"].items():
+            _emit(f"fig13_{k}", us,
+                  f"t_ms={v['t_ms']:.1f};e_mJ={v['e_mJ']:.1f};"
+                  f"local_t={v['local_t_ms']:.1f};local_e={v['local_e_mJ']:.1f}")
+
+    if want("roofline"):
+        _section("roofline (from dry-run artifacts)")
+        from benchmarks import roofline
+        rows = roofline.full_table(roofline.default_art_dir())
+        if rows:
+            for r in rows:
+                if r["mesh"] == "16x16":
+                    _emit(f"roofline_{r['arch']}_{r['shape']}", 0.0,
+                          f"compute_s={r['t_compute_s']:.2e};"
+                          f"memory_s={r['t_memory_s']:.2e};"
+                          f"coll_s={r['t_collective_s']:.2e};"
+                          f"dom={r['dominant']};useful={r['useful_ratio']:.2f}")
+            with open("artifacts/roofline.json", "w") as f:
+                json.dump(rows, f, indent=1)
+        else:
+            _emit("roofline_missing", 0.0,
+                  "run `python -m repro.launch.dryrun --all` first")
+
+    os.makedirs("artifacts", exist_ok=True)
+    with open("artifacts/bench_results.json", "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    print("# wrote artifacts/bench_results.json", flush=True)
+
+
+if __name__ == "__main__":
+    main()

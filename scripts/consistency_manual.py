@@ -1,0 +1,35 @@
+"""Decode path must agree with full-sequence forward: prefill s tokens, decode
+token s, compare logits against full forward over s+1 tokens."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import reduced
+from repro.models import apply_model, decode_step, init_params, prefill
+
+if __name__ == "__main__":
+    archs = sys.argv[1:] or ARCH_IDS
+    key = jax.random.PRNGKey(1)
+    for arch in archs:
+        cfg = reduced(get_config(arch))
+        params = init_params(cfg, key)
+        b, s = 2, 33
+        toks = jax.random.randint(jax.random.PRNGKey(2), (b, s + 1), 0,
+                                  cfg.vocab_size)
+        aux = None
+        if cfg.n_aux_tokens:
+            aux = jax.random.normal(
+                jax.random.PRNGKey(3), (b, cfg.n_aux_tokens, cfg.d_model)) * 0.1
+        full_logits, _, _ = apply_model(params, cfg, toks, aux_embeds=aux,
+                                        mode="train")
+        _, cache = prefill(params, cfg, toks[:, :s], attn_len=s + 1,
+                           aux_embeds=aux)
+        dec_logits, _ = decode_step(params, cfg, cache, toks[:, s:s + 1],
+                                    jnp.int32(s))
+        err = float(jnp.max(jnp.abs(full_logits[:, s] - dec_logits)))
+        rel = err / (float(jnp.max(jnp.abs(full_logits[:, s]))) + 1e-9)
+        print(f"{arch:24s} max_abs_err={err:.3e} rel={rel:.3e} "
+              f"{'OK' if rel < 2e-3 else 'FAIL'}")

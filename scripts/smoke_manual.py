@@ -1,0 +1,33 @@
+"""Manual smoke: every arch, reduced config, train loss + prefill + decode."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import reduced
+from repro.models import decode_step, init_params, loss_fn, prefill
+
+if __name__ == "__main__":
+    archs = sys.argv[1:] or ARCH_IDS
+    key = jax.random.PRNGKey(0)
+    for arch in archs:
+        cfg = reduced(get_config(arch))
+        params = init_params(cfg, key)
+        n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+        b, s = 2, 32
+        batch = {"tokens": jnp.ones((b, s), jnp.int32),
+                 "labels": jnp.ones((b, s), jnp.int32)}
+        if cfg.n_aux_tokens:
+            batch["aux_embeds"] = jnp.ones((b, cfg.n_aux_tokens, cfg.d_model),
+                                           jnp.float32) * 0.01
+        loss, metrics = loss_fn(params, cfg, batch)
+        # serving path
+        logits, cache = prefill(params, cfg, batch["tokens"],
+                                attn_len=s + 4,
+                                aux_embeds=batch.get("aux_embeds"))
+        tok = jnp.ones((b, 1), jnp.int32)
+        lg2, cache = decode_step(params, cfg, cache, tok, jnp.int32(s))
+        ok = bool(jnp.isfinite(loss)) and bool(jnp.all(jnp.isfinite(lg2)))
+        print(f"{arch:24s} params={n:>10d} loss={float(loss):8.4f} "
+              f"decode_logits={lg2.shape} finite={ok}")

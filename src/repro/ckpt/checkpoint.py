@@ -1,0 +1,46 @@
+"""Pytree checkpointing: .npz leaves + JSON treedef, atomic writes.
+
+No external deps (orbax unavailable offline). Handles arbitrary nested
+dict/list/tuple pytrees of jnp/np arrays and python scalars.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, tree, *, step: int = 0, extra: dict = None):
+    """Atomically save a pytree to <path>.npz + <path>.json."""
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    meta = {"treedef": str(treedef), "n_leaves": len(leaves), "step": step,
+            "extra": extra or {}}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    os.close(fd)
+    np.savez(tmp + ".npz", **arrays)
+    os.replace(tmp + ".npz", path + ".npz")
+    with open(tmp, "w") as f:
+        json.dump(meta, f)
+    os.replace(tmp, path + ".json")
+
+
+def load_checkpoint(path: str, like):
+    """Restore into the structure of `like` (shapes/dtypes preserved from
+    disk). Returns (tree, meta)."""
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    data = np.load(path + ".npz")
+    leaves = [jnp.asarray(data[f"leaf_{i}"]) for i in range(meta["n_leaves"])]
+    _, treedef = jax.tree_util.tree_flatten(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta

@@ -1,0 +1,25 @@
+"""kimi-k2-1t-a32b [trillion-param MoE, paper-table; arXiv:2501.kimi2].
+
+61L, d_model=7168, 64 heads (GQA kv=8), 384 experts top-8 with d_expert=2048
+plus one shared expert, vocab=163840. XL config: FSDP param sharding and
+Adafactor states (AdamW f32 states for 1T params cannot fit the assigned
+meshes; see DESIGN.md / EXPERIMENTS.md memory analysis).
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=2048,
+    vocab_size=163840,
+    rope_theta=50000.0,
+    block_pattern=("moe",),
+    moe=MoEConfig(n_experts=384, top_k=8, d_expert=2048, n_shared_experts=1),
+    fsdp=True,
+    optimizer="adafactor",
+)

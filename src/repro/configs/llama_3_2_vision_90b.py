@@ -1,0 +1,24 @@
+"""llama-3.2-vision-90b [VLM, cross-attn image layers;
+hf:meta-llama/Llama-3.2-11B-Vision scaled per assignment].
+
+100 layers, every 5th a gated cross-attention layer over image-patch
+embeddings (vision encoder stubbed: input_specs() provides precomputed patch
+embeddings (batch, 1600, d_model)). FSDP + Adafactor (90B params).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    rope_theta=5e5,
+    block_pattern=("dense", "dense", "dense", "dense", "xattn"),
+    n_aux_tokens=1600,
+    fsdp=True,
+    optimizer="adafactor",
+)

@@ -1,0 +1,22 @@
+"""recurrentgemma-9b [hybrid RG-LRU + local attention, 1:2; arXiv:2402.19427].
+
+38 layers in the Griffin pattern (rec, rec, local-attn): 12 full groups plus a
+(rec, rec) tail. MQA (kv=1) local attention with a 2048-token window — this
+arch runs long_500k natively (recurrent state + bounded window cache).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256000,
+    block_pattern=("rec", "rec", "lattn"),
+    window=2048,
+    long_context_window=2048,
+    rope_theta=10000.0,
+)

@@ -1,0 +1,25 @@
+"""seamless-m4t-large-v2 [audio enc-dec, arXiv:2308.11596].
+
+Transformer backbone only: 24L encoder + 24L decoder, d_model=1024, 16 heads
+(kv=16, MHA), d_ff=8192, vocab=256206. The speech frontend (mel-spectrogram +
+conv feature extractor) is stubbed: input_specs() feeds precomputed frame
+embeddings of shape (batch, n_frames, d_model) to the encoder.
+"""
+from repro.configs.base import EncoderConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    norm="layernorm",
+    act="gelu",
+    block_pattern=("decx",),
+    encoder=EncoderConfig(n_layers=24, n_frames=1024),
+    n_aux_tokens=1024,
+    rope_theta=10000.0,
+)

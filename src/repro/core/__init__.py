@@ -1,0 +1,5 @@
+# The paper's primary contribution: DNN decoupling + intermediate feature
+# compression (autoencoder + quantization) + the overhead/split model that
+# feeds the MAHPPO scheduler (repro.rl) through the MEC env (repro.env).
+from repro.core.compressor import (compression_rate, dequantize, quantize)
+from repro.core.split import SplitPlan, split_table

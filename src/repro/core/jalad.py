@@ -1,0 +1,42 @@
+"""JALAD baseline [Li et al., ICPADS'18]: 8-bit quantization + entropy coding.
+
+Only the *compressed size* enters the scheduling problem, so the entropy
+coder is modelled information-theoretically: the coded size of the quantized
+feature is its empirical byte entropy (the expected Huffman/arithmetic code
+length). This matches how the paper uses JALAD (as a latency/size baseline).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressor import dequantize, quantize
+
+
+def byte_entropy_bits(codes, bits=8):
+    """Empirical entropy (bits/symbol) of quantized codes."""
+    n_sym = 1 << bits
+    hist = jnp.zeros((n_sym,), jnp.float32).at[codes.reshape(-1)].add(1.0)
+    p = hist / jnp.maximum(hist.sum(), 1.0)
+    return -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-30)), 0.0))
+
+
+def jalad_compress_size_bits(feat, bits=8):
+    """Estimated coded size (bits) of a feature map, plus the rate vs f32."""
+    codes, mn, mx = quantize(feat, bits)
+    h = byte_entropy_bits(codes, bits)
+    n = feat.size
+    size_bits = h * n
+    rate = 32.0 / jnp.maximum(h, 1e-6)
+    return size_bits, rate
+
+
+def jalad_roundtrip(feat, bits=8):
+    codes, mn, mx = quantize(feat, bits)
+    return dequantize(codes, bits, mn, mx).astype(feat.dtype)
+
+
+# entropy-coding throughput on the UE (symbols/s) — JALAD's coder runs on the
+# CPU; this constant drives its (large) compression latency in the overhead
+# model, mirroring the paper's Fig. 7 observation.
+ENTROPY_CODER_SYMBOLS_PER_S = 2.0e7

@@ -1,0 +1,118 @@
+"""Per-module latency/energy tables (paper §3.4, Fig. 7).
+
+The paper *measures* these on a Jetson Nano with an external power monitor.
+No such hardware exists in this container, so the tables come from an
+analytic device model
+
+    t(module) = max(flops / (eff * peak_flops), bytes / mem_bw)
+    e(module) = t * active_power
+
+calibrated so a full ResNet18(224) inference costs ~50 ms / ~0.11 J on the
+UE — the magnitudes behind the paper's T0 = 0.5 s (~10x a full local
+inference) and beta = 0.47 (latency/energy ratio). For the assigned
+transformer architectures the same model runs over per-layer FLOPs/bytes
+derived from the ModelConfig; on the TPU-edge side the constants are v5e's.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    name: str
+    peak_flops: float           # effective FLOP/s (incl. utilization)
+    mem_bw: float               # B/s
+    active_power: float         # W while computing
+    mem_bytes: float            # capacity for feasibility checks
+
+
+# Jetson-Nano-like UE in 5 W low-power mode: ~236 GFLOPS fp16 peak, ~30%
+# effective => 72 GFLOP/s; 25.6 GB/s LPDDR4; ~2.1 W above idle.
+JETSON_NANO = DeviceModel("jetson-nano", 7.2e10, 2.56e10 * 0.6, 2.1, 4e9)
+
+# A beefier UE tier (phone-class NPU) used for transformer-UE experiments.
+PHONE_NPU = DeviceModel("phone-npu", 2.0e12, 5.0e10, 3.0, 8e9)
+
+# TPU v5e edge chip (the "edge server" of the lifted scenario).
+TPU_V5E = DeviceModel("tpu-v5e", 197e12 * 0.5, 819e9, 170.0, 16e9)
+
+
+def module_time_energy(flops: float, bytes_moved: float, dev: DeviceModel):
+    t = max(flops / dev.peak_flops, bytes_moved / dev.mem_bw)
+    return t, t * dev.active_power
+
+
+# -------------------------------------------------- transformer layer costs
+def layer_costs(cfg: ModelConfig, seq_len: int) -> List[dict]:
+    """Per-layer {flops, bytes, param_bytes} for a seq_len-token forward.
+    bytes = params read once + activations in/out (bf16)."""
+    d, dh = cfg.d_model, cfg.head_dim
+    hq, hkv, f = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    s = seq_len
+    act = 2 * s * d * 2  # in+out hidden, bf16
+    out = []
+    for bt in cfg.block_types():
+        if bt == "mamba2":
+            ss = cfg.ssm
+            di = ss.expand * d
+            h = di // ss.head_dim
+            n = ss.d_state
+            proj = 2 * s * d * (2 * di + 2 * n + h) + 2 * s * di * d
+            ssd = 2 * s * h * ss.head_dim * n * 3 + 2 * s * ss.chunk * (
+                n + h * ss.head_dim)
+            pbytes = (d * (2 * di + 2 * n + h) + di * d) * 2
+            out.append({"flops": proj + ssd, "bytes": pbytes + act,
+                        "param_bytes": pbytes})
+            continue
+        if bt == "rec":
+            drnn = d
+            fl = 2 * s * d * drnn * 2 + 2 * s * drnn * drnn * 2 \
+                + 2 * s * drnn * d + 6 * s * d * f
+            pbytes = (2 * d * drnn + 2 * drnn * drnn + drnn * d + 3 * d * f) * 2
+            out.append({"flops": fl, "bytes": pbytes + act,
+                        "param_bytes": pbytes})
+            continue
+        # attention part
+        attn_proj = 2 * s * d * (hq + 2 * hkv) * dh + 2 * s * hq * dh * d
+        ctx = min(s, cfg.window) if bt == "lattn" else s
+        attn_qk = 4 * s * ctx * hq * dh
+        a_params = (d * (hq + 2 * hkv) * dh + hq * dh * d) * 2
+        fl = attn_proj + attn_qk
+        pbytes = a_params
+        if bt in ("xattn",):
+            fl = 2 * s * d * hq * dh + 2 * s * hq * dh * d \
+                + 4 * s * cfg.n_aux_tokens * hq * dh \
+                + 2 * cfg.n_aux_tokens * d * 2 * hkv * dh
+        if bt == "decx":
+            nf = cfg.encoder.n_frames if cfg.encoder else 0
+            fl += 2 * s * d * hq * dh + 2 * s * hq * dh * d \
+                + 4 * s * nf * hq * dh
+            pbytes += a_params
+        # ffn part
+        if bt == "moe":
+            m = cfg.moe
+            ffl = 2 * s * d * m.n_experts  # router
+            ffl += 6 * s * d * m.d_expert * (m.top_k + m.n_shared_experts)
+            fp = (m.n_experts + m.n_shared_experts) * 3 * d * m.d_expert * 2
+            # only the activated experts' weights stream from memory
+            fbytes = 3 * d * m.d_expert * (m.top_k + m.n_shared_experts) * 2
+        elif bt == "mamba2":
+            ffl, fp, fbytes = 0, 0, 0
+        else:
+            mult = 3 if cfg.act == "swiglu" else 2
+            ffl = mult * 2 * s * d * f
+            fp = mult * d * f * 2
+            fbytes = fp
+        out.append({"flops": fl + ffl, "bytes": pbytes + fbytes + act,
+                    "param_bytes": pbytes + fp})
+    return out
+
+
+def embed_costs(cfg: ModelConfig, seq_len: int) -> dict:
+    pb = cfg.vocab_size * cfg.d_model * 2
+    return {"flops": 2 * seq_len * cfg.d_model * cfg.vocab_size,  # lm head
+            "bytes": pb * 2, "param_bytes": pb * (1 if cfg.tie_embeddings else 2)}

@@ -1,0 +1,189 @@
+"""DNN decoupling: split plans and the per-split overhead tables that define
+the RL environment's action space (paper §3.2-3.4).
+
+A split decision b in {0, 1, ..., B+1} means (paper convention):
+  b = 0    offload the raw input
+  b = k    run modules/layers up to candidate point k on the UE, compress the
+           boundary feature with the AE (+quantization), transmit
+  b = B+1  full local inference
+
+``split_table`` builds, for a backbone (CNN or assigned transformer arch),
+the arrays {t_local, e_local, t_comp, e_comp, f_bits, feasible} the MEC env
+consumes. Architecture-family constraints (DESIGN.md §6):
+  * MoE archs: a split is feasible only if the UE-side parameter bytes fit
+    UE memory (expert banks usually force b=0).
+  * VLM: splits below the last cross-attn layer ship the image embeddings
+    (compressed at the same rate) alongside the boundary feature.
+  * enc-dec: the encoder runs on the UE for any decoder-side split; b=0
+    ships the (stub) mel frames.
+  * SSM / hybrid: boundary additionally carries the recurrent state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import overhead as oh
+from repro.core.cnn import CNNModel
+
+
+@dataclasses.dataclass
+class SplitPlan:
+    name: str
+    # candidate boundaries; entry k (1-based) = number of UE-side modules
+    points: List[int]
+    t_local: np.ndarray          # (B+2,) cumulative UE compute latency
+    e_local: np.ndarray
+    t_comp: np.ndarray           # compressor latency at each b
+    e_comp: np.ndarray
+    f_bits: np.ndarray           # offload payload (bits); 0 for b = B+1
+    feasible: np.ndarray         # bool (B+2,)
+
+    @property
+    def n_actions(self):
+        return len(self.f_bits)
+
+
+def _finalize(name, points, rows, full_bits_zero=True):
+    t_l, e_l, t_c, e_c, fb, feas = (np.array([r[i] for r in rows])
+                                    for i in range(6))
+    return SplitPlan(name, points, t_l, e_l, t_c, e_c, fb,
+                     feas.astype(bool))
+
+
+# --------------------------------------------------------------------- CNN
+def cnn_split_table(model: CNNModel, in_size: int, *,
+                    dev=oh.JETSON_NANO, ae_ratio=(16, 12, 8, 4),
+                    quant_bits=8, batch=1,
+                    input_bits_per_px=8) -> SplitPlan:
+    """ae_ratio: per-split-point channel-reduction factors R_c. Defaults
+    mirror the paper's Fig. 4 (R up to ~128 at early points, decreasing with
+    depth: the AE compresses early features best). May be a scalar."""
+    flops = model.module_flops(in_size)
+    shapes = model.feature_shapes(in_size)
+    points = list(model.split_after)
+    if not hasattr(ae_ratio, "__len__"):
+        ae_ratio = [ae_ratio] * len(points)
+    rows = []
+    # b = 0: raw input offload
+    raw_bits = batch * 3 * in_size * in_size * input_bits_per_px
+    rows.append((0.0, 0.0, 0.0, 0.0, raw_bits, True))
+    for pi, k in enumerate(points):
+        fl = sum(flops[:k + 1]) * batch
+        t, e = oh.module_time_energy(fl, fl / 8, dev)
+        c, h, w = shapes[k]
+        cp = max(1, c // ae_ratio[pi])
+        enc_fl = 2 * c * cp * h * w * batch
+        tc, ec = oh.module_time_energy(enc_fl, enc_fl / 4, dev)
+        bits = batch * cp * h * w * quant_bits
+        rows.append((t, e, tc, ec, bits, True))
+    fl = sum(flops) * batch
+    t, e = oh.module_time_energy(fl, fl / 8, dev)
+    rows.append((t, e, 0.0, 0.0, 0.0, True))
+    return _finalize(model.name, points, rows)
+
+
+def cnn_jalad_table(model: CNNModel, in_size: int, *, dev=oh.JETSON_NANO,
+                    entropy_bits=5.0, batch=1) -> SplitPlan:
+    """JALAD baseline: 8-bit quant + entropy coding; no channel reduction;
+    coder latency from symbols/s throughput (the paper's Fig. 7 point that
+    entropy coding on large features dominates)."""
+    from repro.core.jalad import ENTROPY_CODER_SYMBOLS_PER_S as CPS
+    flops = model.module_flops(in_size)
+    shapes = model.feature_shapes(in_size)
+    points = list(model.split_after)
+    rows = []
+    raw_bits = batch * 3 * in_size * in_size * 8
+    rows.append((0.0, 0.0, 0.0, 0.0, raw_bits, True))
+    for k in points:
+        fl = sum(flops[:k + 1]) * batch
+        t, e = oh.module_time_energy(fl, fl / 8, dev)
+        c, h, w = shapes[k]
+        n = batch * c * h * w
+        tc = n / CPS
+        ec = tc * dev.active_power
+        rows.append((t, e, tc, ec, n * entropy_bits, True))
+    fl = sum(flops) * batch
+    t, e = oh.module_time_energy(fl, fl / 8, dev)
+    rows.append((t, e, 0.0, 0.0, 0.0, True))
+    return _finalize(model.name + "-jalad", points, rows)
+
+
+# ------------------------------------------------------------- transformers
+def transformer_split_table(cfg: ModelConfig, *, seq_len=128,
+                            ue_dev=oh.PHONE_NPU, n_points=4,
+                            ae_ratio=None, quant_bits=None,
+                            batch=1) -> SplitPlan:
+    ae_ratio = ae_ratio or cfg.bottleneck_ratio
+    quant_bits = quant_bits or cfg.quant_bits
+    layers = oh.layer_costs(cfg, seq_len)
+    L = len(layers)
+    emb = oh.embed_costs(cfg, seq_len)
+    btypes = cfg.block_types()
+    points = [max(1, round(L * (i + 1) / (n_points + 1)))
+              for i in range(n_points)]
+
+    embed_pb = cfg.vocab_size * cfg.d_model * 2
+    cum_fl = np.cumsum([l["flops"] for l in layers]) * batch
+    cum_pb = np.cumsum([l["param_bytes"] for l in layers])
+
+    # family extras
+    last_x = max((i for i, bt in enumerate(btypes) if bt in ("xattn",)),
+                 default=-1)
+    aux_bits_raw = 0
+    if cfg.family == "vlm":
+        aux_bits_raw = cfg.n_aux_tokens * cfg.d_model * 16 * batch
+    enc_flops = 0
+    if cfg.family == "encdec":
+        enc_layers = oh.layer_costs(
+            cfg.replace(block_pattern=("dense",), n_layers=cfg.encoder.n_layers),
+            cfg.encoder.n_frames)
+        enc_flops = sum(l["flops"] for l in enc_layers) * batch
+        aux_bits_raw = cfg.encoder.n_frames * cfg.d_model * 16 * batch
+
+    rows = []
+    # b = 0: raw input (token ids; for audio the stub mel frames)
+    if cfg.family == "encdec":
+        raw_bits = cfg.encoder.n_frames * 80 * 32 * batch + seq_len * 32 * batch
+    elif cfg.family == "vlm":
+        # raw pixels for 1600 patches ~ (patch 14x14x3 @8bit)
+        raw_bits = cfg.n_aux_tokens * 14 * 14 * 3 * 8 * batch + seq_len * 32 * batch
+    else:
+        raw_bits = seq_len * 32 * batch
+    rows.append((0.0, 0.0, 0.0, 0.0, raw_bits, True))
+
+    d = cfg.d_model
+    dprime = max(1, d // ae_ratio)
+    rate = (d * 32.0) / (dprime * quant_bits)
+    for k in points:
+        fl = cum_fl[k - 1] + (enc_flops if cfg.family == "encdec" else 0)
+        t, e = oh.module_time_energy(fl, fl / 4, ue_dev)
+        enc_fl = 2 * seq_len * d * dprime * batch
+        tc, ec = oh.module_time_energy(enc_fl, enc_fl / 4, ue_dev)
+        bits = seq_len * dprime * quant_bits * batch
+        # NOTE: recurrent/SSM state does NOT cross the boundary — layer i's
+        # state is internal to layer i; edge-side layers recompute their own
+        # states from the transmitted hidden sequence. Only context extras
+        # (image embeds / encoder output) ship.
+        if cfg.family == "vlm" and k <= last_x:
+            bits += aux_bits_raw * 32 / (16 * rate)   # embeds, AE+quant'ed
+        if cfg.family == "encdec":
+            bits += cfg.encoder.n_frames * dprime * quant_bits * batch
+        ue_pb = embed_pb + cum_pb[k - 1]
+        rows.append((t, e, tc, ec, bits, ue_pb <= ue_dev.mem_bytes))
+    fl_full = cum_fl[-1] + emb["flops"] * batch \
+        + (enc_flops if cfg.family == "encdec" else 0)
+    t, e = oh.module_time_energy(fl_full, fl_full / 4, ue_dev)
+    total_pb = embed_pb + cum_pb[-1] + (emb["param_bytes"] - embed_pb)
+    rows.append((t, e, 0.0, 0.0, 0.0, total_pb <= ue_dev.mem_bytes))
+    return _finalize(cfg.name, points, rows)
+
+
+def split_table(target, **kw) -> SplitPlan:
+    """target: CNNModel or ModelConfig."""
+    if isinstance(target, CNNModel):
+        return cnn_split_table(target, kw.pop("in_size", 224), **kw)
+    return transformer_split_table(target, **kw)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import (synthetic_image_batch, token_batch_stream,
+                                  TokenPipelineConfig)

@@ -1,0 +1,1 @@
+from repro.env.mecenv import EnvParams, EnvState, MECEnv, make_env_params

@@ -1,0 +1,31 @@
+"""Wireless uplink model (paper §3.3, Eq. 5).
+
+Urban cellular: channel gain g_n = d_n^-l (path-loss exponent l=3), static
+channels with bandwidth omega and background noise sigma. The uplink rate of
+UE n under policy-induced interference is
+
+  r_n = omega_c * log2(1 + p_n g_n / (sigma_c + sum_{i != n, c_i = c_n,
+                                       i offloading} p_i g_i))
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def channel_gain(d, pathloss=3.0):
+    return jnp.power(jnp.maximum(d, 1.0), -pathloss)
+
+
+def uplink_rates(p, c, g, transmitting, *, omega, sigma):
+    """p, g: (N,) watts/gains; c: (N,) int channel ids;
+    transmitting: (N,) bool (offloading AND has work).
+    omega, sigma: (C,) per-channel bandwidth (Hz) and noise (W).
+    Returns (N,) bits/s."""
+    pg = p * g * transmitting
+    n_ch = omega.shape[0]
+    onehot = jax.nn.one_hot(c, n_ch, dtype=pg.dtype)    # (N, C)
+    per_channel = onehot.T @ pg                          # (C,) total power
+    interference = per_channel[c] - pg                   # exclude self
+    sinr = (p * g) / (sigma[c] + interference)
+    return omega[c] * jnp.log2(1.0 + sinr)

@@ -1,0 +1,179 @@
+"""Multi-agent collaborative-inference MEC environment (paper §3–4).
+
+State s_t = {k_t, l_t, n_t, d} (remaining tasks, remaining local seconds of
+the half-completed task, remaining offload bits, UE distances). Action per UE
+a = (b, c, p): split point, channel, transmit power. Reward (Eq. 12):
+
+    r_t = -T0 / K_t - beta * E_t / K_t
+
+Frame dynamics are computed *analytically* (no inner loop): with the frame's
+rates fixed (Eq. 5 interference, per the paper), each UE finishes its
+carry-over task, then floor(T_rem / t_task) whole tasks, then starts one
+partial task. Fully vectorized over UEs and vmappable over parallel envs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.split import SplitPlan
+from repro.env.channel import channel_gain, uplink_rates
+
+
+class EnvParams(NamedTuple):
+    l_new: jnp.ndarray      # (B+2,) local+compression seconds per split
+    n_new: jnp.ndarray      # (B+2,) offload bits per split
+    feasible: jnp.ndarray   # (B+2,) bool
+    p_compute: jnp.ndarray  # scalar: UE compute power (W)
+    t0: jnp.ndarray         # frame seconds
+    beta: jnp.ndarray
+    omega: jnp.ndarray      # (C,)
+    sigma: jnp.ndarray      # (C,)
+    p_max: jnp.ndarray
+    lam_tasks: jnp.ndarray  # Poisson mean of K_n
+    d_low: jnp.ndarray
+    d_high: jnp.ndarray
+    n_ue: int
+    pathloss: jnp.ndarray
+
+
+def make_env_params(plan: SplitPlan, *, n_ue=5, n_channels=2, t0=0.5,
+                    beta=0.47, p_compute=2.1, omega=1e6, sigma=1e-9,
+                    p_max=0.5, lam_tasks=200.0, d_low=1.0, d_high=100.0,
+                    pathloss=3.0) -> EnvParams:
+    return EnvParams(
+        l_new=jnp.asarray(plan.t_local + plan.t_comp, jnp.float32),
+        n_new=jnp.asarray(plan.f_bits, jnp.float32),
+        feasible=jnp.asarray(plan.feasible),
+        p_compute=jnp.float32(p_compute),
+        t0=jnp.float32(t0), beta=jnp.float32(beta),
+        omega=jnp.full((n_channels,), omega, jnp.float32),
+        sigma=jnp.full((n_channels,), sigma, jnp.float32),
+        p_max=jnp.float32(p_max), lam_tasks=jnp.float32(lam_tasks),
+        d_low=jnp.float32(d_low), d_high=jnp.float32(d_high),
+        n_ue=n_ue, pathloss=jnp.float32(pathloss))
+
+
+class EnvState(NamedTuple):
+    k: jnp.ndarray          # (N,) remaining tasks (incl. in-flight)
+    l: jnp.ndarray          # (N,) remaining local seconds of current task
+    n: jnp.ndarray          # (N,) remaining offload bits of current task
+    d: jnp.ndarray          # (N,) distances
+    t: jnp.ndarray          # frame counter
+    key: jnp.ndarray
+
+
+class MECEnv:
+    """Functional env; all methods are jit/vmap friendly."""
+
+    def __init__(self, params: EnvParams):
+        self.params = params
+        self.n_actions_b = int(params.l_new.shape[0])
+        self.n_channels = int(params.omega.shape[0])
+        self.obs_dim = 4 * params.n_ue
+
+    def reset(self, key, *, eval_mode=False) -> EnvState:
+        p = self.params
+        kk, kd, kn = jax.random.split(key, 3)
+        if eval_mode:
+            k = jnp.full((p.n_ue,), p.lam_tasks, jnp.float32)
+            d = jnp.full((p.n_ue,), 50.0, jnp.float32)
+        else:
+            k = jax.random.poisson(kk, p.lam_tasks, (p.n_ue,)).astype(jnp.float32)
+            d = jax.random.uniform(kd, (p.n_ue,), minval=p.d_low,
+                                   maxval=p.d_high)
+        return EnvState(k=k, l=jnp.zeros((p.n_ue,)), n=jnp.zeros((p.n_ue,)),
+                        d=d, t=jnp.zeros((), jnp.int32), key=kn)
+
+    def observe(self, s: EnvState):
+        p = self.params
+        return jnp.concatenate([s.k / jnp.maximum(p.lam_tasks, 1.0),
+                                s.l / p.t0,
+                                s.n / 1e6,
+                                s.d / 100.0])
+
+    def action_mask(self):
+        return self.params.feasible
+
+    def step(self, s: EnvState, b, c, p_tx):
+        """b, c: (N,) int32; p_tx: (N,) float in (0, p_max].
+        Returns (next_state, reward, done, info)."""
+        prm = self.params
+        p_tx = jnp.clip(p_tx, 1e-4, prm.p_max)
+        g = channel_gain(s.d, prm.pathloss)
+        has_work = s.k > 0
+        # a UE contributes interference if it offloads anything this frame
+        offloads = ((s.n > 0) | (prm.n_new[b] > 0)) & has_work
+        r = uplink_rates(p_tx, c, g, offloads, omega=prm.omega,
+                         sigma=prm.sigma)
+        r = jnp.maximum(r, 1.0)  # avoid div-by-zero; 1 b/s floor
+
+        t_rem = jnp.full_like(s.l, prm.t0)
+        energy = jnp.zeros_like(s.l)
+        completed = jnp.zeros_like(s.l)
+
+        # ---- phase 1: carry-over task (old b; n already fixed)
+        dt_l = jnp.minimum(s.l, t_rem) * has_work
+        t_rem = t_rem - dt_l
+        energy += dt_l * prm.p_compute
+        l1 = s.l - dt_l
+        tx_time = jnp.where(l1 <= 0, jnp.minimum(s.n / r, t_rem), 0.0) * has_work
+        n1 = s.n - tx_time * r
+        n1 = jnp.where(n1 < 1.0, 0.0, n1)
+        t_rem = t_rem - tx_time
+        energy += tx_time * p_tx
+        carried = has_work & (s.l + s.n > 0)
+        done_carry = carried & (l1 <= 0) & (n1 <= 0)
+        completed += done_carry
+        k1 = s.k - done_carry
+
+        # ---- phase 2: whole new tasks at the new split b
+        l_new = prm.l_new[b]
+        n_new = prm.n_new[b]
+        t_task = l_new + n_new / r
+        can = (k1 > 0) & (t_task > 0)
+        m = jnp.where(can, jnp.floor(t_rem / jnp.maximum(t_task, 1e-9)), 0.0)
+        m = jnp.minimum(m, k1)
+        completed += m
+        k2 = k1 - m
+        t_rem = t_rem - m * t_task
+        energy += m * (l_new * prm.p_compute + (n_new / r) * p_tx)
+
+        # ---- phase 3: start one partial task
+        start = (k2 > 0) & (t_rem > 0)
+        dt_l2 = jnp.minimum(l_new, t_rem) * start
+        t_rem2 = t_rem - dt_l2
+        energy += dt_l2 * prm.p_compute
+        l2 = jnp.where(start, l_new - dt_l2, 0.0)
+        tx2 = jnp.where(start & (l2 <= 0), jnp.minimum(n_new / r, t_rem2), 0.0)
+        n2 = jnp.where(start, n_new - tx2 * r, 0.0)
+        n2 = jnp.where(n2 < 1.0, 0.0, n2)
+        energy += tx2 * p_tx
+        finished_partial = start & (l2 <= 0) & (n2 <= 0)
+        completed += finished_partial
+        k3 = k2 - finished_partial
+        l2 = jnp.where(finished_partial, 0.0, l2)
+        n2 = jnp.where(finished_partial, 0.0, n2)
+
+        k_t = completed.sum()
+        e_t = energy.sum()
+        reward = -prm.t0 / jnp.maximum(k_t, 1.0) \
+            - prm.beta * e_t / jnp.maximum(k_t, 1.0)
+        done = jnp.all(k3 <= 0)
+
+        # auto-reset on termination
+        key_next, key_reset = jax.random.split(s.key)
+        fresh = self.reset(key_reset)
+        nxt = EnvState(
+            k=jnp.where(done, fresh.k, k3),
+            l=jnp.where(done, fresh.l, l2),
+            n=jnp.where(done, fresh.n, n2),
+            d=jnp.where(done, fresh.d, s.d),
+            t=jnp.where(done, 0, s.t + 1),
+            key=key_next)
+        info = {"completed": k_t, "energy": e_t,
+                "rate_mean": r.mean(), "offloads": offloads.sum()}
+        return nxt, reward, done, info

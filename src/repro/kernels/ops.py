@@ -1,0 +1,64 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode; on a real TPU
+set REPRO_PALLAS_INTERPRET=0 (or rely on backend autodetection) to compile
+them. Wrappers handle shape normalization (flattening leading dims, padding
+to block multiples where required).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bottleneck as _bn
+from repro.kernels import decode_attn as _da
+from repro.kernels import quant as _q
+
+
+def _interpret_default():
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def quantize(x, mn, mx, *, bits=8, interpret=None):
+    """Any-shape fused quantization; returns integer codes of x.shape."""
+    interpret = _interpret_default() if interpret is None else interpret
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    out = _q.quantize_2d(x2, mn, mx, bits=bits, interpret=interpret)
+    return out.reshape(shape)
+
+
+def dequantize(y, mn, mx, *, bits=8, out_dtype=jnp.float32, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    shape = y.shape
+    y2 = y.reshape(-1, shape[-1])
+    out = _q.dequantize_2d(y2, mn, mx, bits=bits, out_dtype=out_dtype,
+                           interpret=interpret)
+    return out.reshape(shape)
+
+
+def bottleneck_encode(x, w, mn, mx, *, bits=8, interpret=None):
+    """Fused compressor encode. x: (..., d); w: (d, d')."""
+    interpret = _interpret_default() if interpret is None else interpret
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    out = _bn.bottleneck_encode(x2, w, mn, mx, bits=bits, interpret=interpret)
+    return out.reshape(shape[:-1] + (w.shape[1],))
+
+
+def decode_attention(q, k, v, pos, idx, *, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _da.decode_attention(q, k, v, pos, idx, interpret=interpret)
+
+
+def ssd_intra(xh, dt, la, Bm, Cm, *, interpret=None):
+    """Mamba-2 SSD intra-chunk contribution (see kernels/ssd_intra.py)."""
+    from repro.kernels import ssd_intra as _ssd
+    interpret = _interpret_default() if interpret is None else interpret
+    return _ssd.ssd_intra(xh, dt, la, Bm, Cm, interpret=interpret)

@@ -1,0 +1,77 @@
+"""Pallas TPU kernels: fused linear min-max quantize / dequantize (Eq. 1-2).
+
+Memory-bound ops: fusing sub/scale/round/cast into one VMEM pass avoids three
+HBM round-trips of the f32 intermediate. Tiles are (block_m, block_n) with
+block_n a multiple of 128 (lane width); scales live in SMEM-like (1,1) blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, mn_ref, mx_ref, o_ref, *, bits):
+    x = x_ref[...].astype(jnp.float32)
+    mn = mn_ref[0, 0]
+    mx = mx_ref[0, 0]
+    levels = float((1 << bits) - 1)
+    scale = levels / jnp.maximum(mx - mn, 1e-12)
+    y = jnp.clip(jnp.round((x - mn) * scale), 0.0, levels)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _dequant_kernel(y_ref, mn_ref, mx_ref, o_ref, *, bits):
+    y = y_ref[...].astype(jnp.float32)
+    mn = mn_ref[0, 0]
+    mx = mx_ref[0, 0]
+    levels = float((1 << bits) - 1)
+    o_ref[...] = (y * ((mx - mn) / levels) + mn).astype(o_ref.dtype)
+
+
+def _tiles(shape, bm, bn):
+    m, n = shape
+    return (pl.cdiv(m, bm), pl.cdiv(n, bn))
+
+
+def quantize_2d(x, mn, mx, *, bits=8, block=(256, 512), interpret=True):
+    """x: (M, N) float; mn/mx: () scalars. Returns uint8/16 codes (M, N)."""
+    m, n = x.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    grid = _tiles((m, n), bm, bn)
+    out_dtype = jnp.uint8 if bits <= 8 else jnp.uint16
+    scal = lambda v: jnp.asarray(v, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(x, scal(mn), scal(mx))
+
+
+def dequantize_2d(y, mn, mx, *, bits=8, out_dtype=jnp.float32,
+                  block=(256, 512), interpret=True):
+    m, n = y.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    grid = _tiles((m, n), bm, bn)
+    scal = lambda v: jnp.asarray(v, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(y, scal(mn), scal(mx))

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_ref(x, mn, mx, bits=8):
+    """Linear min-max quantization (paper Eq. 1) with static calibration."""
+    levels = (1 << bits) - 1
+    scale = levels / jnp.maximum(mx - mn, 1e-12)
+    y = jnp.clip(jnp.round((x.astype(jnp.float32) - mn) * scale), 0, levels)
+    return y.astype(jnp.uint8 if bits <= 8 else jnp.uint16)
+
+
+def dequantize_ref(y, mn, mx, bits=8):
+    """Paper Eq. 2."""
+    levels = (1 << bits) - 1
+    return y.astype(jnp.float32) * (mx - mn) / levels + mn
+
+
+def bottleneck_encode_ref(x, w, mn, mx, bits=8):
+    """Fused compressor encode: (T, d) @ (d, d') then quantize."""
+    z = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    return quantize_ref(z, mn, mx, bits)
+
+
+def ssd_intra_ref(xh, dt, la, Bm, Cm):
+    """SSD intra-chunk oracle (mirrors models/ssm.ssd_chunked's intra part).
+    xh: (B, NC, Q, H, P); dt, la: (B, NC, Q, H); Bm, Cm: (B, NC, Q, N)."""
+    q = xh.shape[2]
+    seg = la[:, :, :, None, :] - la[:, :, None, :, :]   # (B,NC,i,j,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    seg = jnp.where(mask[None, None, :, :, None], seg, -1e30)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cm, Bm)
+    w = cb[..., None] * jnp.exp(seg) * dt[:, :, None, :, :]
+    return jnp.einsum("bcijh,bcjhp->bcihp", w, xh)
+
+
+def decode_attention_ref(q, k, v, pos, idx):
+    """GQA decode attention over a (ring) KV cache.
+
+    q: (B, Hq, D) single query token; k, v: (B, S, Hkv, D);
+    pos: (B, S) absolute positions (-1 = empty slot); idx: scalar int32.
+    Returns (B, Hq, D) f32."""
+    b, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qf = q.reshape(b, hkv, g, d).astype(jnp.float32) * (d ** -0.5)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, k.astype(jnp.float32))
+    valid = (pos >= 0) & (pos <= idx)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, d)

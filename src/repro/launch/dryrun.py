@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402  (XLA_FLAGS must precede any jax-importing module)
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) combination
+on the production meshes, record memory/cost/collective analysis.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import INPUT_SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (attn_len_for, input_specs, make_prefill_step,
+                                make_serve_step, make_train_step, params_spec)
+from repro.models import sharding as shd
+from repro.optim.optimizers import opt_state_pspec
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+                "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result-shape bytes of collective ops in post-SPMD HLO, by type."""
+    out = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(m.group(1)):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES.get(dt, 4)
+        out[kind] = out.get(kind, 0) + total
+        out.setdefault(kind + "_count", 0)
+        out[kind + "_count"] += 1
+    return out
+
+
+def _metrics_shardings(mesh, struct):
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), struct)
+
+
+def build_lowered(arch: str, shape_name: str, *, multi_pod: bool):
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.models import meshctx
+    meshctx.set_mesh(mesh)  # enables EP shard_map + activation pinning
+    shape = INPUT_SHAPES[shape_name]
+    specs = input_specs(cfg, shape_name)
+    pstruct = params_spec(cfg)
+    ppspecs = shd.params_pspecs(mesh, pstruct, cfg)
+    psh = shd.wrap(mesh, ppspecs)
+    sizes = {"param_bytes_per_device": shd.bytes_per_device(pstruct, psh)}
+
+    if shape.kind == "train":
+        train_step, opt_init = make_train_step(cfg)
+        ostruct = jax.eval_shape(opt_init, pstruct)
+        ospecs = opt_state_pspec(cfg.optimizer, ppspecs)
+        osh = shd.wrap(mesh, ospecs)
+        bsh = shd.batch_shardings(mesh, specs["batch"])
+        _, _, mstruct = jax.eval_shape(
+            train_step, pstruct, ostruct, specs["batch"])
+        msh = _metrics_shardings(mesh, mstruct)
+        fn = jax.jit(train_step, in_shardings=(psh, osh, bsh),
+                     out_shardings=(psh, osh, msh))
+        args = (pstruct, ostruct, specs["batch"])
+        sizes["opt_bytes_per_device"] = shd.bytes_per_device(ostruct, osh)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, attn_len_for(cfg, shape))
+        tok_sh = shd.batch_shardings(mesh, {"t": specs["tokens"]})["t"]
+        in_sh = [psh, tok_sh]
+        args = [pstruct, specs["tokens"]]
+        if "aux_embeds" in specs:
+            in_sh.append(shd.batch_shardings(
+                mesh, {"a": specs["aux_embeds"]})["a"])
+            args.append(specs["aux_embeds"])
+        lstruct, cstruct = jax.eval_shape(step, *args)
+        csh = shd.cache_shardings(mesh, cstruct, cfg)
+        lsh = shd.batch_shardings(mesh, {"l": lstruct})["l"]
+        fn = jax.jit(step, in_shardings=tuple(in_sh),
+                     out_shardings=(lsh, csh))
+        args = tuple(args)
+        sizes["cache_bytes_per_device"] = shd.bytes_per_device(cstruct, csh)
+    else:  # decode
+        step = make_serve_step(cfg)
+        csh = shd.cache_shardings(mesh, specs["cache"], cfg)
+        tok_sh = shd.batch_shardings(mesh, {"t": specs["token"]})["t"]
+        idx_sh = NamedSharding(mesh, P())
+        lstruct, _ = jax.eval_shape(step, pstruct, specs["cache"],
+                                    specs["token"], specs["idx"])
+        lsh = shd.batch_shardings(mesh, {"l": lstruct})["l"]
+        fn = jax.jit(step, in_shardings=(psh, csh, tok_sh, idx_sh),
+                     out_shardings=(lsh, csh))
+        args = (pstruct, specs["cache"], specs["token"], specs["idx"])
+        sizes["cache_bytes_per_device"] = shd.bytes_per_device(
+            specs["cache"], csh)
+
+    return fn, args, mesh, sizes
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            keep_text: bool = False):
+    t0 = time.time()
+    fn, args, mesh, sizes = build_lowered(arch, shape_name,
+                                          multi_pod=multi_pod)
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "n_devices": mesh.size,
+           "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2)}
+    rec.update(sizes)
+    try:
+        ca = compiled.cost_analysis()
+        rec["cost_analysis"] = {k: v for k, v in ca.items()
+                                if isinstance(v, (int, float))}
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis_error"] = str(e)
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: getattr(ma, k) for k in
+            ("generated_code_size_in_bytes", "argument_size_in_bytes",
+             "output_size_in_bytes", "temp_size_in_bytes",
+             "alias_size_in_bytes", "peak_memory_in_bytes")
+            if hasattr(ma, k)}
+    except Exception as e:  # pragma: no cover
+        rec["memory_analysis_error"] = str(e)
+    text = compiled.as_text()
+    rec["collectives"] = collective_bytes(text)  # unweighted (reference)
+    try:
+        from repro.launch import hloanalysis
+        w = hloanalysis.analyze(text)
+        rec["collectives_weighted"] = w["collectives"]
+        rec["hlo_dot_flops"] = w["hlo_dot_flops"]
+    except Exception as e:  # pragma: no cover
+        rec["hlo_analysis_error"] = str(e)
+    rec["hlo_bytes"] = len(text)
+    if keep_text:
+        rec["hlo_text"] = text
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list(ARCH_IDS) if (args.all or not args.arch) else [args.arch]
+    shapes = (list(INPUT_SHAPES) if (args.all or not args.shape)
+              else [args.shape])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    rec = run_one(arch, shape, multi_pod=mp)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    ca = rec.get("cost_analysis", {})
+                    print(f"[ok] {tag} compile={rec['compile_s']}s "
+                          f"flops={ca.get('flops', 0):.3e} "
+                          f"coll={sum(v for k, v in rec['collectives'].items() if not k.endswith('_count')):.3e}B",
+                          flush=True)
+                except Exception:
+                    failures += 1
+                    with open(path + ".err", "w") as f:
+                        f.write(traceback.format_exc())
+                    print(f"[FAIL] {tag}")
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} dry-run combinations failed")
+    print("all dry-run combinations compiled OK")
+
+
+if __name__ == "__main__":
+    main()

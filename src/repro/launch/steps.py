@@ -1,0 +1,97 @@
+"""Step builders: train_step / prefill_step / serve_step closures over a
+ModelConfig, plus ShapeDtypeStruct input specs for dry-run lowering."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+from repro.models import cache as cache_lib
+from repro.models import model as model_lib
+from repro.models.layers import dtype_of
+from repro.optim import (cosine_schedule, global_norm, make_optimizer)
+from repro.optim.optimizers import opt_state_pspec
+
+
+# ------------------------------------------------------------------ steps
+def make_train_step(cfg: ModelConfig, *, base_lr=3e-4, warmup=200,
+                    total=10000, clip=1.0):
+    opt_init, opt_update = make_optimizer(cfg.optimizer)
+    lr_fn = cosine_schedule(base_lr, warmup, total)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model_lib.loss_fn, has_aux=True)(params, cfg, batch)
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, clip / jnp.maximum(gn, 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype),
+                                       grads)
+        lr = lr_fn(opt_state["step"])
+        params, opt_state = opt_update(grads, opt_state, params, lr)
+        metrics = dict(metrics, loss=loss, grad_norm=gn, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step, opt_init
+
+
+def make_prefill_step(cfg: ModelConfig, attn_len: int):
+    def prefill_step(params, tokens, aux_embeds=None):
+        return model_lib.prefill(params, cfg, tokens, attn_len=attn_len,
+                                 aux_embeds=aux_embeds)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, token, idx):
+        return model_lib.decode_step(params, cfg, cache, token, idx)
+    return serve_step
+
+
+# ------------------------------------------------------------- input specs
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def params_spec(cfg: ModelConfig, key=None):
+    key = jax.random.PRNGKey(0) if key is None else key
+    return jax.eval_shape(lambda k: model_lib.init_params(cfg, k), key)
+
+
+def attn_len_for(cfg: ModelConfig, shape) -> int:
+    """Allocated KV length for full-attention layers under this shape."""
+    if shape.name == "long_500k":
+        return cfg.long_context_window
+    return shape.seq_len
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of the step that
+    this input shape lowers (train_step / prefill_step / serve_step)."""
+    shape = INPUT_SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    cdt = dtype_of(cfg.compute_dtype)
+    if shape.kind == "train":
+        batch = {"tokens": sds((b, s), jnp.int32),
+                 "labels": sds((b, s), jnp.int32)}
+        if cfg.n_aux_tokens:
+            batch["aux_embeds"] = sds((b, cfg.n_aux_tokens, cfg.d_model), cdt)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out = {"tokens": sds((b, s), jnp.int32)}
+        if cfg.n_aux_tokens:
+            out["aux_embeds"] = sds((b, cfg.n_aux_tokens, cfg.d_model), cdt)
+        return out
+    # decode
+    cache = cache_lib.make_cache(cfg, b, attn_len_for(cfg, shape),
+                                 leaf_fn=lambda sh, dt: sds(sh, dt))
+    return {"cache": cache, "token": sds((b, 1), jnp.int32),
+            "idx": sds((), jnp.int32)}
+
+
+def long_context_applicable(cfg: ModelConfig) -> bool:
+    """long_500k needs sub-quadratic decode state. All archs qualify here:
+    SSM/hybrid natively; attention archs via the sliding-window cache variant
+    (cfg.long_context_window) — see DESIGN.md."""
+    return True

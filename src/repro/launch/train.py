@@ -1,0 +1,80 @@
+"""Training launcher: ``--arch <id>`` selects an assigned architecture;
+reduced-scale flags allow CPU runs; on a real TPU fleet the production mesh
+from mesh.py and the sharding rules from models/sharding.py apply unchanged.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+      --reduce --steps 100 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from repro.ckpt import save_checkpoint
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import reduced
+from repro.data.synthetic import TokenPipelineConfig, token_batch_stream
+from repro.launch.steps import make_train_step
+from repro.models import init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b", choices=ARCH_IDS)
+    ap.add_argument("--reduce", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--out", default="artifacts/train")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduce:
+        cfg = reduced(cfg, n_layers=4, d_model=256)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"[train] arch={args.arch} params={n/1e6:.1f}M "
+          f"optimizer={cfg.optimizer}")
+
+    train_step, opt_init = make_train_step(
+        cfg, base_lr=args.lr, warmup=min(20, args.steps // 5),
+        total=args.steps)
+    opt = opt_init(params)
+    step_fn = jax.jit(train_step)
+    stream = token_batch_stream(TokenPipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, batch=args.batch))
+
+    os.makedirs(args.out, exist_ok=True)
+    logf = open(os.path.join(args.out, f"{args.arch}.jsonl"), "w")
+    t0 = time.time()
+    for step in range(1, args.steps + 1):
+        batch = next(stream)
+        if cfg.n_aux_tokens:
+            import jax.numpy as jnp
+            batch = dict(batch, aux_embeds=jnp.zeros(
+                (args.batch, cfg.n_aux_tokens, cfg.d_model)))
+        params, opt, m = step_fn(params, opt, batch)
+        if step % 10 == 0 or step == 1:
+            rec = {"step": step, "loss": float(m["loss"]),
+                   "grad_norm": float(m["grad_norm"]),
+                   "elapsed_s": round(time.time() - t0, 1)}
+            print(f"[train] {rec}")
+            logf.write(json.dumps(rec) + "\n")
+            logf.flush()
+        if args.ckpt_every and step % args.ckpt_every == 0:
+            save_checkpoint(os.path.join(args.out, f"{args.arch}_{step}"),
+                            params, step=step)
+    save_checkpoint(os.path.join(args.out, f"{args.arch}_final"), params,
+                    step=args.steps)
+    print(f"[train] done; checkpoints + logs in {args.out}/")
+
+
+if __name__ == "__main__":
+    main()

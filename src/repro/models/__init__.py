@@ -1,0 +1,6 @@
+from repro.models.model import (apply_model, decode_step, init_params,
+                                layer_plan, loss_fn, prefill)
+from repro.models.cache import make_cache
+
+__all__ = ["apply_model", "decode_step", "init_params", "layer_plan",
+           "loss_fn", "prefill", "make_cache"]

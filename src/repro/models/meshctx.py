@@ -1,0 +1,84 @@
+"""Mesh context: lets model code apply sharding constraints / shard_map
+when tracing under a known production mesh, while remaining mesh-agnostic
+for CPU smoke tests (no-ops when unset).
+
+Launch code (dryrun / train / serve) calls ``set_mesh(mesh)`` before
+tracing; model internals use ``wsc_batch`` to pin the residual stream to
+batch (data) sharding — without this, GSPMD may flip activations to
+batch-replicated/feature-sharded layouts to avoid FSDP weight gathers,
+which explodes collective volume (see EXPERIMENTS.md §Perf kimi-k2).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = None
+
+
+def set_mesh(mesh):
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+@contextmanager
+def use_mesh(mesh):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield
+    finally:
+        _MESH = prev
+
+
+def dp_axes():
+    m = _MESH
+    if m is None:
+        return None
+    return ("pod", "data") if "pod" in m.axis_names else ("data",)
+
+
+def _axsize(mesh, axes):
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return n
+
+
+def wsc_batch(x, *, seq_parallel=False):
+    """Pin the leading (batch) dim of x to data-parallel sharding; with
+    seq_parallel additionally shard the sequence dim over 'model'
+    (Megatron-style sequence parallelism: the layer's output all-reduce
+    becomes a reduce-scatter + the next layer's input all-gather, ~2x less
+    collective volume, and norms compute on 1/TP of the tokens)."""
+    m = _MESH
+    if m is None:
+        return x
+    dp = dp_axes()
+    if x.shape[0] % _axsize(m, dp) != 0:
+        return x
+    spec = [dp] + [None] * (x.ndim - 1)
+    if (seq_parallel and x.ndim == 3 and x.shape[1] > 1
+            and x.shape[1] % m.shape["model"] == 0):
+        spec[1] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(m, P(*spec)))
+
+
+def ep_available(cfg):
+    """Expert-parallel shard_map path available for this config/mesh?"""
+    m = _MESH
+    if m is None or cfg.moe is None or "model" not in m.axis_names:
+        return False
+    if cfg.moe.n_experts % m.shape["model"] != 0:
+        return False
+    if cfg.fsdp and cfg.d_model % m.shape["data"] != 0:
+        return False
+    return True

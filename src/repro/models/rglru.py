@@ -1,0 +1,94 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x_t))
+i_t = sigmoid(W_x x_t)
+
+Full-sequence path uses jax.lax.associative_scan (the recurrence is a linear
+first-order scan); decode is a single-step update. Recurrence math in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, dtype_of
+
+C_CONST = 8.0
+
+
+def init_rglru(key, cfg):
+    d = cfg.d_model
+    d_rnn = d
+    d_conv = 4
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": dense_init(ks[0], (d, d_rnn), dt),
+        "wgate": dense_init(ks[1], (d, d_rnn), dt),
+        "conv_w": dense_init(ks[2], (d_conv, d_rnn), dt),
+        "conv_b": jnp.zeros((d_rnn,), dt),
+        "wa": dense_init(ks[3], (d_rnn, d_rnn), dt),
+        "ba": jnp.zeros((d_rnn,), jnp.float32),
+        "wi": dense_init(ks[4], (d_rnn, d_rnn), dt),
+        "bi": jnp.zeros((d_rnn,), jnp.float32),
+        # softplus(lambda) ~ 0.7 => a ~ exp(-8*0.7*0.5) moderately slow decay
+        "lam": jnp.full((d_rnn,), 0.3, jnp.float32),
+        "out": dense_init(ks[5], (d_rnn, d), dt),
+    }
+
+
+def _gates(p, xc):
+    """xc: (..., d_rnn) post-conv branch. Returns log_a, b (f32)."""
+    xf = xc.astype(jnp.float32)
+    ra = jax.nn.sigmoid(xf @ p["wa"].astype(jnp.float32) + p["ba"])
+    ii = jax.nn.sigmoid(xf @ p["wi"].astype(jnp.float32) + p["bi"])
+    log_a = -C_CONST * jax.nn.softplus(p["lam"]) * ra
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (ii * xf)
+    return a, b
+
+
+def _conv(p, x, init_state=None):
+    d_conv = p["conv_w"].shape[0]
+    pad = d_conv - 1
+    if init_state is None:
+        xpad = jnp.pad(x, ((0, 0), (pad, 0), (0, 0)))
+    else:
+        xpad = jnp.concatenate([init_state.astype(x.dtype), x], axis=1)
+    y = sum(xpad[:, i:i + x.shape[1], :] * p["conv_w"][i] for i in range(d_conv))
+    return y + p["conv_b"], xpad[:, -pad:, :]
+
+
+def apply_rglru(p, x, cfg, *, state=None):
+    """x: (B, L, d). Returns (out, new_state {"conv","h"})."""
+    xb = x @ p["wx"]
+    gate = x @ p["wgate"]
+    conv0 = None if state is None else state["conv"]
+    xc, conv_state = _conv(p, xb, conv0)
+    a, b = _gates(p, xc)                                 # (B,L,D) f32
+    if state is not None:
+        # fold h0 into the first step: b_0 += a_0 * h0
+        b = b.at[:, 0].add(a[:, 0] * state["h"])
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = (h.astype(x.dtype) * jax.nn.gelu(gate)) @ p["out"]
+    return out, {"conv": conv_state, "h": h[:, -1].astype(jnp.float32)}
+
+
+def decode_rglru(p, x, cfg, state):
+    """One-step decode. x: (B, 1, d); state {"conv": (B,3,D), "h": (B,D)}."""
+    xb = x @ p["wx"]
+    gate = x @ p["wgate"]
+    d_conv = p["conv_w"].shape[0]
+    xin = jnp.concatenate([state["conv"].astype(xb.dtype), xb], axis=1)
+    xc = sum(xin[:, i, :] * p["conv_w"][i] for i in range(d_conv)) + p["conv_b"]
+    a, b = _gates(p, xc)                                 # (B,D)
+    hnew = a * state["h"] + b
+    out = (hnew[:, None, :].astype(x.dtype) * jax.nn.gelu(gate)) @ p["out"]
+    return out, {"conv": xin[:, 1:, :], "h": hnew}

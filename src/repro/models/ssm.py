@@ -1,0 +1,198 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Training / prefill use the chunked SSD algorithm (quadratic intra-chunk,
+linear inter-chunk scan); decode is the O(1) recurrent update. n_groups is
+fixed to 1 (B/C shared across heads), matching the mamba2-1.3b config.
+
+Projections are SEPARATE matmuls (z, x, BC, dt) rather than one fused
+in_proj: under tensor parallelism x/z/dt shard over heads ('model' axis)
+while the head-shared B/C stay replicated — a fused projection forces GSPMD
+to reshard slices of the fused output (collective-permute per layer) and to
+all-reduce the C.B intra-chunk einsum. See EXPERIMENTS.md §Perf (mamba2).
+
+All recurrence math runs in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, dtype_of
+
+NEG_INF = -1e30
+
+
+def dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.head_dim, s.d_state, s.d_conv
+
+
+def init_mamba(key, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, h, pdim, n, d_conv = dims(cfg)
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "wz": dense_init(ks[0], (d, d_inner), dt),
+        "wx": dense_init(ks[1], (d, d_inner), dt),
+        "wbc": dense_init(ks[2], (d, 2 * n), dt),
+        "wdt": dense_init(ks[3], (d, h), dt),
+        "conv_x": dense_init(ks[4], (d_conv, d_inner), dt, scale=1.0),
+        "conv_x_b": jnp.zeros((d_inner,), dt),
+        "conv_bc": dense_init(ks[5], (d_conv, 2 * n), dt, scale=1.0),
+        "conv_bc_b": jnp.zeros((2 * n,), dt),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dt),
+        "out_proj": dense_init(ks[0], (d_inner, d), dt),
+    }
+
+
+def _conv_seq(w, b, x, init_state=None):
+    """Depthwise causal conv over time. x: (B, L, C). Returns (y, state)."""
+    d_conv = w.shape[0]
+    pad = d_conv - 1
+    if init_state is None:
+        xpad = jnp.pad(x, ((0, 0), (pad, 0), (0, 0)))
+    else:
+        xpad = jnp.concatenate([init_state.astype(x.dtype), x], axis=1)
+    y = sum(xpad[:, i:i + x.shape[1], :] * w[i] for i in range(d_conv))
+    return jax.nn.silu(y + b), xpad[:, -pad:, :]
+
+
+def _conv_step(w, b, x1, state):
+    """One-step conv. x1: (B, C); state: (B, d_conv-1, C)."""
+    d_conv = w.shape[0]
+    xin = jnp.concatenate([state.astype(x1.dtype), x1[:, None, :]], axis=1)
+    y = sum(xin[:, i, :] * w[i] for i in range(d_conv))
+    return jax.nn.silu(y + b), xin[:, 1:, :]
+
+
+def _gated_norm(p, y, z, eps=1e-6):
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    ms = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(ms + eps) * p["norm_scale"].astype(jnp.float32))
+
+
+def ssd_chunked(xh, dth, a_log, Bm, Cm, chunk, h0=None, use_pallas=False):
+    """Chunked SSD.
+
+    xh: (B, L, H, P) inputs; dth: (B, L, H) f32 (post-softplus);
+    a_log: (B, L, H) f32 = -exp(A_log)*dt (log decay per step);
+    Bm, Cm: (B, L, N) f32; h0: (B, H, P, N) initial state or None.
+    use_pallas routes the intra-chunk quadratic through kernels/ssd_intra.
+    Returns y (B, L, H, P) f32, final state (B, H, P, N) f32.
+    """
+    b, l, h, pdim = xh.shape
+    n = Bm.shape[-1]
+    q = min(chunk, l)
+    pad = (-l) % q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dth = jnp.pad(dth, ((0, 0), (0, pad), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = xh.shape[1] // q
+    xh = xh.reshape(b, nc, q, h, pdim)
+    dth = dth.reshape(b, nc, q, h)
+    a_log = a_log.reshape(b, nc, q, h)
+    Bm = Bm.reshape(b, nc, q, n)
+    Cm = Cm.reshape(b, nc, q, n)
+
+    la = jnp.cumsum(a_log, axis=2)                      # (B,nc,Q,H) inclusive
+    # intra-chunk (dual / attention-like form)
+    if use_pallas:
+        from repro.kernels import ops as kops
+        y_intra = kops.ssd_intra(xh, dth, la, Bm, Cm)
+    else:
+        seg = la[:, :, :, None, :] - la[:, :, None, :, :]   # (B,nc,i,j,H)
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        seg = jnp.where(mask[None, None, :, :, None], seg, NEG_INF)
+        decay = jnp.exp(seg)                                # (B,nc,i,j,H)
+        cb = jnp.einsum("bcin,bcjn->bcij", Cm, Bm)          # (B,nc,i,j)
+        w = cb[..., None] * decay * dth[:, :, None, :, :]   # (B,nc,i,j,H)
+        y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xh)
+
+    # chunk states: contribution of chunk c to the state at its end
+    last = la[:, :, -1:, :]                             # (B,nc,1,H)
+    dec_to_end = jnp.exp(last - la)                     # (B,nc,Q,H)
+    st = jnp.einsum("bcqh,bcqn,bcqhp->bchpn",
+                    dec_to_end * dth, Bm, xh)
+
+    # inter-chunk scan
+    chunk_decay = jnp.exp(la[:, :, -1, :])              # (B,nc,H)
+
+    def step(hprev, inp):
+        dec, s = inp                                    # (B,H), (B,H,P,N)
+        hnew = hprev * dec[:, :, None, None] + s
+        return hnew, hprev                              # emit state at chunk START
+
+    hinit = jnp.zeros((b, h, pdim, n), jnp.float32) if h0 is None else h0
+    hlast, hstart = jax.lax.scan(
+        step, hinit,
+        (chunk_decay.transpose(1, 0, 2), st.transpose(1, 0, 2, 3, 4)))
+    hstart = hstart.transpose(1, 0, 2, 3, 4)            # (B,nc,H,P,N)
+
+    # inter contribution: y_inter[i] = exp(la_i) * C_i . h_start
+    y_inter = jnp.einsum("bcqh,bcqn,bchpn->bcqhp",
+                         jnp.exp(la), Cm, hstart)
+    y = (y_intra + y_inter).reshape(b, nc * q, h, pdim)[:, :l]
+    return y, hlast
+
+
+def apply_mamba(p, x, cfg, *, state=None):
+    """Full-sequence forward (train/prefill). x: (B, L, d).
+    state: optional {"conv_x","conv_bc","h"} to resume. Returns
+    (out, new_state)."""
+    d_inner, h, pdim, n, _ = dims(cfg)
+    b, l, _ = x.shape
+    z = x @ p["wz"]
+    xs = x @ p["wx"]
+    bc = x @ p["wbc"]
+    dt = x @ p["wdt"]
+    cx = None if state is None else state["conv_x"]
+    cbc = None if state is None else state["conv_bc"]
+    h0 = None if state is None else state["h"]
+    xs, conv_x_state = _conv_seq(p["conv_x"], p["conv_x_b"], xs, cx)
+    bc, conv_bc_state = _conv_seq(p["conv_bc"], p["conv_bc_b"], bc, cbc)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+    xh = xs.reshape(b, l, h, pdim).astype(jnp.float32)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a_log = -jnp.exp(p["A_log"]) * dtf                  # (B,L,H)
+    y, hlast = ssd_chunked(xh, dtf, a_log, Bm.astype(jnp.float32),
+                           Cm.astype(jnp.float32), cfg.ssm.chunk, h0,
+                           use_pallas=cfg.use_pallas_ssd)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(b, l, d_inner)
+    out = _gated_norm(p, y, z.astype(jnp.float32)).astype(x.dtype) @ p["out_proj"]
+    return out, {"conv_x": conv_x_state, "conv_bc": conv_bc_state, "h": hlast}
+
+
+def decode_mamba(p, x, cfg, state):
+    """One-token decode. x: (B, 1, d); state {"conv_x": (B, d_conv-1, di),
+    "conv_bc": (B, d_conv-1, 2N), "h": (B, H, P, N)}."""
+    d_inner, h, pdim, n, d_conv = dims(cfg)
+    b = x.shape[0]
+    z = x @ p["wz"]
+    xs = (x @ p["wx"])[:, 0]
+    bc = (x @ p["wbc"])[:, 0]
+    dt = (x @ p["wdt"])[:, 0]
+    xs, new_cx = _conv_step(p["conv_x"], p["conv_x_b"], xs, state["conv_x"])
+    bc, new_cbc = _conv_step(p["conv_bc"], p["conv_bc_b"], bc,
+                             state["conv_bc"])
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+    xh = xs.reshape(b, h, pdim).astype(jnp.float32)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dtf)             # (B,H)
+    hnew = (state["h"] * a[:, :, None, None]
+            + jnp.einsum("bh,bn,bhp->bhpn", dtf, Bm.astype(jnp.float32), xh))
+    yh = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), hnew)
+    yh = yh + p["D"][None, :, None] * xh
+    yflat = yh.reshape(b, 1, d_inner)
+    out = _gated_norm(p, yflat, z.astype(jnp.float32)).astype(x.dtype) @ p["out_proj"]
+    return out, {"conv_x": new_cx, "conv_bc": new_cbc, "h": hnew}

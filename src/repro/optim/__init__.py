@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (adafactor_init, adafactor_update,
+                                    adamw_init, adamw_update, global_norm,
+                                    make_optimizer)
+from repro.optim.schedule import cosine_schedule
+
+__all__ = ["adamw_init", "adamw_update", "adafactor_init", "adafactor_update",
+           "global_norm", "make_optimizer", "cosine_schedule"]

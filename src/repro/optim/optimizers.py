@@ -1,0 +1,129 @@
+"""Optimizers: AdamW (f32 states) and Adafactor (factored states, for XL
+archs where AdamW states cannot fit the mesh — see DESIGN.md).
+
+State layout is a plain pytree so pjit shards it like params; adafactor
+stores per-leaf slot dicts in a flat list (same tree order as params).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+# ------------------------------------------------------------------- AdamW
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    step = state["step"] + 1
+    sf = step.astype(jnp.float32)
+    bc1 = 1 - b1 ** sf
+    bc2 = 1 - b2 ** sf
+
+    new_m = jax.tree_util.tree_map(
+        lambda g, m: b1 * m + (1 - b1) * g.astype(jnp.float32),
+        grads, state["m"])
+    new_v = jax.tree_util.tree_map(
+        lambda g, v: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        grads, state["v"])
+
+    def upd(p, m, v):
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        wd = weight_decay if p.ndim >= 2 else 0.0
+        p2 = p.astype(jnp.float32) - lr * (update + wd * p.astype(jnp.float32))
+        return p2.astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, new_m, new_v)
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+# --------------------------------------------------------------- Adafactor
+def _factored(p):
+    return p.ndim >= 2
+
+
+def adafactor_init(params):
+    leaves = jax.tree_util.tree_leaves(params)
+    slots = []
+    for p in leaves:
+        if _factored(p):
+            slots.append({
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            })
+        else:
+            slots.append({"v": jnp.zeros(p.shape, jnp.float32)})
+    return {"slots": slots, "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, lr, *, decay=0.8, eps=1e-30,
+                     clip_thresh=1.0, weight_decay=0.0):
+    step = state["step"] + 1
+    sf = step.astype(jnp.float32)
+    beta = 1.0 - sf ** (-decay)
+    pleaves, treedef = jax.tree_util.tree_flatten(params)
+    gleaves = treedef.flatten_up_to(grads)
+    new_p, new_slots = [], []
+    for p, g, slot in zip(pleaves, gleaves, state["slots"]):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + eps
+        if _factored(p):
+            vr = beta * slot["vr"] + (1 - beta) * g2.mean(axis=-1)
+            vc = beta * slot["vc"] + (1 - beta) * g2.mean(axis=-2)
+            rfac = jax.lax.rsqrt(
+                vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps))
+            cfac = jax.lax.rsqrt(vc)
+            update = gf * rfac[..., None] * cfac[..., None, :]
+            new_slot = {"vr": vr, "vc": vc}
+        else:
+            v = beta * slot["v"] + (1 - beta) * g2
+            update = gf * jax.lax.rsqrt(v)
+            new_slot = {"v": v}
+        rms = jnp.sqrt(jnp.mean(update * update))
+        update = update / jnp.maximum(1.0, rms / clip_thresh)
+        p2 = p.astype(jnp.float32) - lr * update
+        if weight_decay and p.ndim >= 2:
+            p2 = p2 - lr * weight_decay * p.astype(jnp.float32)
+        new_p.append(p2.astype(p.dtype))
+        new_slots.append(new_slot)
+    return (jax.tree_util.tree_unflatten(treedef, new_p),
+            {"slots": new_slots, "step": step})
+
+
+# ------------------------------------------------------------------ facade
+def make_optimizer(name: str):
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(name)
+
+
+def opt_state_pspec(name: str, params_specs):
+    """PartitionSpec tree for the optimizer state, derived from param specs.
+    params_specs: pytree of PartitionSpec (same structure as params)."""
+    from jax.sharding import PartitionSpec as P
+    if name == "adamw":
+        return {"m": params_specs, "v": params_specs, "step": P()}
+    specs = jax.tree_util.tree_leaves(
+        params_specs, is_leaf=lambda x: isinstance(x, P))
+    slots = []
+    for s in specs:
+        entries = tuple(s)
+        if len(entries) >= 2:
+            slots.append({"vr": P(*entries[:-1]),
+                          "vc": P(*(entries[:-2] + entries[-1:]))})
+        else:
+            slots.append({"v": P(*entries)})
+    return {"slots": slots, "step": P()}

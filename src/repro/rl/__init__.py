@@ -1,0 +1,2 @@
+from repro.rl.mahppo import MAHPPOConfig, evaluate_policy, train_mahppo
+from repro.rl.baselines import local_policy_eval

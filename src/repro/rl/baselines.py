@@ -1,0 +1,60 @@
+"""Baselines (paper §6.3.1): full-local, and fixed/random policies."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.env.mecenv import MECEnv
+
+
+def local_policy_eval(env: MECEnv, *, frames=64, seed=0):
+    """Always run fully locally (b = B+1)."""
+    b_local = env.n_actions_b - 1
+
+    @jax.jit
+    def rollout(key):
+        s = env.reset(key, eval_mode=True)
+
+        def body(s, _):
+            n = env.params.n_ue
+            b = jnp.full((n,), b_local, jnp.int32)
+            c = jnp.zeros((n,), jnp.int32)
+            p = jnp.full((n,), 0.01)
+            s2, reward, done, info = env.step(s, b, c, p)
+            t_task = env.params.l_new[b]
+            e_task = env.params.l_new[b] * env.params.p_compute
+            return s2, {"reward": reward, "t_task": t_task.mean(),
+                        "e_task": e_task.mean(),
+                        "completed": info["completed"]}
+
+        _, out = jax.lax.scan(body, s, None, length=frames)
+        return out
+
+    out = rollout(jax.random.PRNGKey(seed))
+    return {k: float(np.asarray(v).mean()) for k, v in out.items()}
+
+
+def random_policy_eval(env: MECEnv, *, frames=64, seed=0):
+    mask = np.asarray(env.action_mask())
+    valid = np.where(mask)[0]
+
+    @jax.jit
+    def rollout(key):
+        s = env.reset(key, eval_mode=True)
+
+        def body(s, sub):
+            n = env.params.n_ue
+            kb, kc, kp = jax.random.split(sub, 3)
+            b = jnp.asarray(valid)[jax.random.randint(kb, (n,), 0, len(valid))]
+            c = jax.random.randint(kc, (n,), 0, env.n_channels)
+            p = jax.random.uniform(kp, (n,), minval=0.01,
+                                   maxval=env.params.p_max)
+            s2, reward, done, info = env.step(s, b, c, p)
+            return s2, {"reward": reward, "completed": info["completed"]}
+
+        _, out = jax.lax.scan(body, s, jax.random.split(key, frames))
+        return out
+
+    out = rollout(jax.random.PRNGKey(seed))
+    return {k: float(np.asarray(v).mean()) for k, v in out.items()}

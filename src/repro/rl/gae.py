@@ -1,0 +1,22 @@
+"""Generalized advantage estimation (paper Eq. 18)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gae(rewards, values, dones, last_value, *, gamma=0.95, lam=0.95):
+    """rewards, dones: (T, E); values: (T, E); last_value: (E,).
+    Returns (advantages, returns), each (T, E)."""
+    def body(carry, xs):
+        adv_next, v_next = carry
+        r, v, d = xs
+        nonterm = 1.0 - d
+        delta = r + gamma * v_next * nonterm - v
+        adv = delta + gamma * lam * nonterm * adv_next
+        return (adv, v), adv
+
+    (_, _), advs = jax.lax.scan(
+        body, (jnp.zeros_like(last_value), last_value),
+        (rewards, values, dones.astype(rewards.dtype)), reverse=True)
+    return advs, advs + values

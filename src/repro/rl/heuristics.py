@@ -1,0 +1,86 @@
+"""Non-RL scheduler baselines beyond the paper's Local/JALAD:
+
+* greedy: each UE independently picks argmin_b (t_b + beta * e_b) assuming a
+  clean channel (no interference awareness) at max power, round-robin
+  channels — what a non-coordinating heuristic would do.
+* oracle_static: exhaustive search over joint (b, c) assignments (max-power)
+  for small N — the best *static* policy; the gap RL closes above it comes
+  from state-dependent scheduling.
+"""
+from __future__ import annotations
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.env.channel import channel_gain, uplink_rates
+from repro.env.mecenv import MECEnv
+
+
+def _joint_overhead(env: MECEnv, b, c, p, d):
+    """Expected per-task latency/energy for each UE under joint actions."""
+    prm = env.params
+    g = channel_gain(jnp.asarray(d), prm.pathloss)
+    offl = prm.n_new[jnp.asarray(b)] > 0
+    r = jnp.maximum(uplink_rates(jnp.asarray(p), jnp.asarray(c), g, offl,
+                                 omega=prm.omega, sigma=prm.sigma), 1.0)
+    t = prm.l_new[jnp.asarray(b)] + prm.n_new[jnp.asarray(b)] / r
+    e = (prm.l_new[jnp.asarray(b)] * prm.p_compute
+         + (prm.n_new[jnp.asarray(b)] / r) * jnp.asarray(p))
+    return np.asarray(t), np.asarray(e)
+
+
+def greedy_eval(env: MECEnv, *, d=50.0):
+    """Interference-oblivious greedy (then evaluated WITH interference)."""
+    prm = env.params
+    n = prm.n_ue
+    beta = float(prm.beta)
+    feas = np.asarray(prm.feasible)
+    # single-UE clean-channel overhead per b at p_max
+    g = channel_gain(jnp.full((1,), d), prm.pathloss)
+    best_b, best_cost = 0, np.inf
+    for b in range(len(feas)):
+        if not feas[b]:
+            continue
+        r = float(jnp.maximum(uplink_rates(
+            jnp.full((1,), prm.p_max), jnp.zeros((1,), jnp.int32), g,
+            jnp.asarray([prm.n_new[b] > 0]), omega=prm.omega,
+            sigma=prm.sigma)[0], 1.0))
+        t = float(prm.l_new[b]) + float(prm.n_new[b]) / r
+        e = (float(prm.l_new[b]) * float(prm.p_compute)
+             + float(prm.n_new[b]) / r * float(prm.p_max))
+        cost = t + beta * e
+        if cost < best_cost:
+            best_b, best_cost = b, cost
+    b = [best_b] * n
+    c = [i % env.n_channels for i in range(n)]
+    p = [float(prm.p_max)] * n
+    t, e = _joint_overhead(env, b, c, p, [d] * n)
+    return {"b": b, "t_task": float(t.mean()), "e_task": float(e.mean()),
+            "overhead": float((t + beta * e).mean())}
+
+
+def oracle_static_eval(env: MECEnv, *, d=50.0, max_joint=300_000):
+    """Exhaustive joint search over (b, c) per UE at p_max (small N only)."""
+    prm = env.params
+    n = prm.n_ue
+    beta = float(prm.beta)
+    feas = [i for i in range(len(np.asarray(prm.feasible)))
+            if bool(prm.feasible[i])]
+    n_c = env.n_channels
+    space = len(feas) * n_c
+    if space ** n > max_joint:
+        raise ValueError(f"joint space too large: {space}^{n}")
+    best = None
+    for combo in itertools.product(range(space), repeat=n):
+        b = [feas[x // n_c] for x in combo]
+        c = [x % n_c for x in combo]
+        p = [float(prm.p_max)] * n
+        t, e = _joint_overhead(env, b, c, p, [d] * n)
+        cost = float((t + beta * e).mean())
+        if best is None or cost < best["overhead"]:
+            best = {"b": b, "c": c, "t_task": float(t.mean()),
+                    "e_task": float(e.mean()), "overhead": cost}
+    return best

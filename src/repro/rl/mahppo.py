@@ -1,0 +1,226 @@
+"""MAHPPO (paper §5, Algorithm 1): multi-actor hybrid-action PPO with one
+global critic. Fully-jitted iteration: vectorized rollout (lax.scan over the
+horizon, vmap over parallel envs) + K-epoch minibatch updates.
+
+Paper defaults: ||M||=1024, B=256, K reuse, gamma=0.95, lambda=0.95,
+eps=0.2, zeta=0.001, lr=1e-4.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.env.mecenv import MECEnv
+from repro.optim import adamw_init, adamw_update
+from repro.rl import nets
+from repro.rl.gae import gae
+
+
+@dataclasses.dataclass(frozen=True)
+class MAHPPOConfig:
+    horizon: int = 1024          # ||M|| (split across n_envs)
+    batch: int = 256
+    reuse: int = 10              # K
+    gamma: float = 0.95
+    lam: float = 0.95
+    clip: float = 0.2
+    ent_coef: float = 0.001      # zeta
+    lr: float = 1e-4
+    n_envs: int = 8
+    iterations: int = 50
+    norm_adv: bool = True
+
+
+def init_agent(key, env: MECEnv):
+    n = env.params.n_ue
+    ka, kc = jax.random.split(key)
+    actor_keys = jax.random.split(ka, n)
+    actors = jax.vmap(lambda k: nets.init_actor(
+        k, env.obs_dim, env.n_actions_b, env.n_channels))(actor_keys)
+    critic = nets.init_critic(kc, env.obs_dim)
+    return {"actors": actors, "critic": critic}
+
+
+def _policy_all(actors, obs, mask):
+    """obs: (obs_dim,) -> per-actor (N,...) heads."""
+    return jax.vmap(lambda a: nets.actor_forward(a, obs, mask))(actors)
+
+
+def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
+    mask = env.action_mask()
+    p_max = env.params.p_max
+    n_ue = env.params.n_ue
+
+    def sample_step(agent, key, states):
+        """states: batched EnvState over E envs."""
+        obs = jax.vmap(env.observe)(states)                       # (E, D)
+        lb, lc, mu, ls = jax.vmap(
+            lambda o: _policy_all(agent["actors"], o, mask))(obs)  # (E,N,..)
+        keys = jax.random.split(key, obs.shape[0] * n_ue).reshape(
+            obs.shape[0], n_ue, 2)
+        b, c, u = jax.vmap(jax.vmap(nets.sample_hybrid))(keys, lb, lc, mu, ls)
+        logp = jax.vmap(jax.vmap(nets.log_prob_hybrid))(lb, lc, mu, ls, b, c, u)
+        value = jax.vmap(lambda o: nets.critic_forward(agent["critic"], o))(obs)
+        p_tx = nets.exec_power(u, p_max)
+        nstates, reward, done, info = jax.vmap(env.step)(states, b, c, p_tx)
+        tr = {"obs": obs, "b": b, "c": c, "u": u, "logp": logp,
+              "reward": reward, "done": done, "value": value,
+              "completed": info["completed"], "energy": info["energy"]}
+        return nstates, tr
+
+    def collect(agent, key, states):
+        T = cfg.horizon // cfg.n_envs
+
+        def body(carry, _):
+            states, key = carry
+            key, sub = jax.random.split(key)
+            states, tr = sample_step(agent, sub, states)
+            return (states, key), tr
+
+        (states, key), traj = jax.lax.scan(body, (states, key), None, length=T)
+        last_obs = jax.vmap(env.observe)(states)
+        last_v = jax.vmap(
+            lambda o: nets.critic_forward(agent["critic"], o))(last_obs)
+        return states, key, traj, last_v
+
+    def loss_fn(agent, batch):
+        obs, b, c, u = batch["obs"], batch["b"], batch["c"], batch["u"]
+        adv, ret, logp_old = batch["adv"], batch["ret"], batch["logp"]
+        lb, lc, mu, ls = jax.vmap(
+            lambda o: _policy_all(agent["actors"], o, mask))(obs)
+        logp = jax.vmap(jax.vmap(nets.log_prob_hybrid))(lb, lc, mu, ls, b, c, u)
+        ratio = jnp.exp(logp - logp_old)                          # (B, N)
+        a = adv[:, None]
+        surr = jnp.minimum(ratio * a,
+                           jnp.clip(ratio, 1 - cfg.clip, 1 + cfg.clip) * a)
+        ent = jax.vmap(jax.vmap(nets.entropy_hybrid))(lb, lc, ls)
+        actor_loss = -(surr.mean(axis=0).sum()
+                       + cfg.ent_coef * ent.mean(axis=0).sum())
+        v = jax.vmap(lambda o: nets.critic_forward(agent["critic"], o))(obs)
+        critic_loss = jnp.mean((v - ret) ** 2)
+        total = actor_loss + critic_loss
+        return total, {"actor_loss": actor_loss, "value_loss": critic_loss,
+                       "entropy": ent.mean(), "ratio": ratio.mean()}
+
+    def update(agent, opt, key, traj, last_v):
+        adv, ret = gae(traj["reward"], traj["value"], traj["done"], last_v,
+                       gamma=cfg.gamma, lam=cfg.lam)
+        T, E = adv.shape
+        M = T * E
+        flat = {
+            "obs": traj["obs"].reshape(M, -1),
+            "b": traj["b"].reshape(M, n_ue), "c": traj["c"].reshape(M, n_ue),
+            "u": traj["u"].reshape(M, n_ue),
+            "logp": traj["logp"].reshape(M, n_ue),
+            "adv": adv.reshape(M), "ret": ret.reshape(M)}
+        if cfg.norm_adv:
+            a = flat["adv"]
+            flat["adv"] = (a - a.mean()) / (a.std() + 1e-8)
+        n_updates = cfg.reuse * max(M // cfg.batch, 1)
+
+        def epoch_body(carry, sub):
+            agent, opt = carry
+            idx = jax.random.choice(sub, M, (cfg.batch,), replace=False)
+            mb = jax.tree_util.tree_map(lambda x: x[idx], flat)
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(agent, mb)
+            agent, opt = adamw_update(grads, opt, agent, cfg.lr,
+                                      weight_decay=0.0)
+            return (agent, opt), metrics
+
+        keys = jax.random.split(key, n_updates)
+        (agent, opt), metrics = jax.lax.scan(epoch_body, (agent, opt), keys)
+        metrics = jax.tree_util.tree_map(lambda x: x[-1], metrics)
+        return agent, opt, metrics
+
+    @jax.jit
+    def iteration(agent, opt, key, states):
+        key, k1, k2 = jax.random.split(key, 3)
+        states, key, traj, last_v = collect(agent, k1, states)
+        agent, opt, metrics = update(agent, opt, k2, traj, last_v)
+        metrics = dict(metrics,
+                       reward_mean=traj["reward"].mean(),
+                       completed=traj["completed"].mean(),
+                       energy=traj["energy"].mean())
+        return agent, opt, key, states, metrics
+
+    return iteration
+
+
+def train_mahppo(env: MECEnv, cfg: MAHPPOConfig, seed=0,
+                 log_cb: Callable = None):
+    key = jax.random.PRNGKey(seed)
+    key, ki, kr = jax.random.split(key, 3)
+    agent = init_agent(ki, env)
+    opt = adamw_init(agent)
+    states = jax.vmap(env.reset)(jax.random.split(kr, cfg.n_envs))
+    iteration = make_train_fns(env, cfg)
+    history = []
+    for it in range(cfg.iterations):
+        agent, opt, key, states, metrics = iteration(agent, opt, key, states)
+        rec = {k: float(v) for k, v in metrics.items()}
+        rec["iteration"] = it
+        rec["env_steps"] = (it + 1) * cfg.horizon
+        history.append(rec)
+        if log_cb:
+            log_cb(rec)
+    return agent, history
+
+
+# ----------------------------------------------------------------- eval
+def evaluate_policy(env: MECEnv, agent, *, frames=64, seed=0,
+                    deterministic=True):
+    """Run eval-mode episodes; report per-task latency/energy (Eq. 7/8
+    realized under the learned policy) plus cumulative reward."""
+    mask = env.action_mask()
+    p_max = env.params.p_max
+    n_ue = env.params.n_ue
+
+    @jax.jit
+    def rollout(key):
+        s = env.reset(key, eval_mode=True)
+
+        def body(carry, sub):
+            s = carry
+            obs = env.observe(s)
+            lb, lc, mu, ls = _policy_all(agent["actors"], obs, mask)
+            if deterministic:
+                b = jnp.argmax(lb, -1)
+                c = jnp.argmax(lc, -1)
+                u = mu
+            else:
+                b, c, u = jax.vmap(nets.sample_hybrid)(
+                    jax.random.split(sub, n_ue), lb, lc, mu, ls)
+            p_tx = nets.exec_power(u, p_max)
+            s2, reward, done, info = env.step(s, b, c, p_tx)
+            # realized per-task overhead under this frame's interference
+            from repro.env.channel import channel_gain, uplink_rates
+            g = channel_gain(s.d, env.params.pathloss)
+            offl = env.params.n_new[b] > 0
+            r = jnp.maximum(uplink_rates(p_tx, c, g, offl,
+                                         omega=env.params.omega,
+                                         sigma=env.params.sigma), 1.0)
+            t_task = env.params.l_new[b] + env.params.n_new[b] / r
+            e_task = (env.params.l_new[b] * env.params.p_compute
+                      + (env.params.n_new[b] / r) * p_tx)
+            # completion-weighted per-task overhead: a UE finishing 18 fast
+            # offloaded tasks counts 18x, one slow local task counts once.
+            w = jnp.where(t_task > 0, env.params.t0 / t_task, 0.0) * (s.k > 0)
+            return s2, {"reward": reward,
+                        "t_sum": (t_task * w).sum(), "e_sum": (e_task * w).sum(),
+                        "w_sum": w.sum(), "completed": info["completed"],
+                        "done": done}
+
+        _, out = jax.lax.scan(body, s, jax.random.split(key, frames))
+        return out
+
+    out = rollout(jax.random.PRNGKey(seed))
+    res = {k: float(np.asarray(v).mean()) for k, v in out.items()}
+    res["t_task"] = res.pop("t_sum") / max(res["w_sum"], 1e-9)
+    res["e_task"] = res.pop("e_sum") / max(res.pop("w_sum"), 1e-9)
+    return res

@@ -1,0 +1,96 @@
+"""Actor/critic networks (paper §5.1, Fig. 3).
+
+Each UE has an actor: a shared trunk (256, 128) encoding the global state,
+and three output branches (64 units each) for the hybrid action:
+  * split point b   — categorical over B+2 (masked by feasibility)
+  * channel c       — categorical over C
+  * transmit power  — Gaussian (mu, sigma) over a pre-squash variable u;
+                      executed power = sigmoid(u) * p_max
+One global critic (256, 128, 64, 1) predicts the state value.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LOG_STD_MIN, LOG_STD_MAX = -3.0, 1.0
+
+
+def _linear_init(key, nin, nout, scale=np.sqrt(2.0)):
+    w = jax.random.orthogonal(key, max(nin, nout))[:nin, :nout] * scale
+    return {"w": w.astype(jnp.float32), "b": jnp.zeros((nout,))}
+
+
+def _mlp_init(key, sizes, out_scale=0.01):
+    ks = jax.random.split(key, len(sizes) - 1)
+    layers = []
+    for i in range(len(sizes) - 1):
+        scale = out_scale if i == len(sizes) - 2 else np.sqrt(2.0)
+        layers.append(_linear_init(ks[i], sizes[i], sizes[i + 1], scale))
+    return layers
+
+
+def _mlp(layers, x):
+    for i, p in enumerate(layers):
+        x = x @ p["w"] + p["b"]
+        if i < len(layers) - 1:
+            x = jnp.tanh(x)
+    return x
+
+
+def init_actor(key, obs_dim, n_b, n_c):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {"trunk": _mlp_init(k1, (obs_dim, 256, 128), out_scale=np.sqrt(2.0)),
+            "head_b": _mlp_init(k2, (128, 64, n_b)),
+            "head_c": _mlp_init(k3, (128, 64, n_c)),
+            "head_p": _mlp_init(k4, (128, 64, 2))}
+
+
+def actor_forward(p, obs, mask):
+    """obs: (obs_dim,). Returns (logits_b, logits_c, mu, log_std)."""
+    h = jnp.tanh(_mlp(p["trunk"], obs))
+    logits_b = _mlp(p["head_b"], h) + jnp.where(mask, 0.0, -1e9)
+    logits_c = _mlp(p["head_c"], h)
+    mu, raw = jnp.split(_mlp(p["head_p"], h), 2, axis=-1)
+    log_std = jnp.clip(raw, LOG_STD_MIN, LOG_STD_MAX)
+    return logits_b, logits_c, mu[..., 0], log_std[..., 0]
+
+
+def init_critic(key, obs_dim):
+    return _mlp_init(key, (obs_dim, 256, 128, 64, 1), out_scale=1.0)
+
+
+def critic_forward(p, obs):
+    return _mlp(p, obs)[..., 0]
+
+
+def sample_hybrid(key, logits_b, logits_c, mu, log_std):
+    kb, kc, kp = jax.random.split(key, 3)
+    b = jax.random.categorical(kb, logits_b)
+    c = jax.random.categorical(kc, logits_c)
+    u = mu + jnp.exp(log_std) * jax.random.normal(kp, mu.shape)
+    return b, c, u
+
+
+def log_prob_hybrid(logits_b, logits_c, mu, log_std, b, c, u):
+    lb = jax.nn.log_softmax(logits_b)[..., b] if logits_b.ndim == 1 else \
+        jnp.take_along_axis(jax.nn.log_softmax(logits_b), b[..., None], -1)[..., 0]
+    lc = jax.nn.log_softmax(logits_c)[..., c] if logits_c.ndim == 1 else \
+        jnp.take_along_axis(jax.nn.log_softmax(logits_c), c[..., None], -1)[..., 0]
+    var = jnp.exp(2 * log_std)
+    lp = -0.5 * ((u - mu) ** 2 / var + 2 * log_std + jnp.log(2 * jnp.pi))
+    return lb + lc + lp
+
+
+def entropy_hybrid(logits_b, logits_c, log_std):
+    pb = jax.nn.softmax(logits_b)
+    pc = jax.nn.softmax(logits_c)
+    hb = -jnp.sum(pb * jnp.log(pb + 1e-12), axis=-1)
+    hc = -jnp.sum(pc * jnp.log(pc + 1e-12), axis=-1)
+    hp = 0.5 * jnp.log(2 * jnp.pi * jnp.e) + log_std
+    return hb + hc + hp
+
+
+def exec_power(u, p_max):
+    return jax.nn.sigmoid(u) * p_max

@@ -1,0 +1,77 @@
+"""CNN backbones + autoencoder compressor training (paper §2, §6.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cnn as cnn_lib
+from repro.core.compressor import (accuracy_with_ae, init_autoencoder,
+                                   roundtrip, train_autoencoder)
+from repro.data.synthetic import synthetic_image_batch
+
+
+@pytest.mark.parametrize("name", ["resnet18", "vgg11", "mobilenetv2"])
+def test_cnn_forward_shapes(name):
+    model = cnn_lib.CNN_FACTORY[name](num_classes=11, width=0.25)
+    params = model.init(jax.random.PRNGKey(0))
+    x = jnp.ones((2, 3, 32, 32))
+    y = cnn_lib.forward(model, params, x)
+    assert y.shape == (2, 11)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+@pytest.mark.parametrize("name", ["resnet18", "vgg11", "mobilenetv2"])
+def test_cnn_split_equals_full(name):
+    """forward == forward_from(forward(..., upto)) at every split point."""
+    model = cnn_lib.CNN_FACTORY[name](num_classes=7, width=0.25)
+    params = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 32, 32))
+    y_full = cnn_lib.forward(model, params, x)
+    for k in model.split_after:
+        feat = cnn_lib.forward(model, params, x, upto=k + 1)
+        y_split = cnn_lib.forward_from(model, params, feat, k + 1)
+        np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_split),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_feature_shape_walker_matches_runtime():
+    model = cnn_lib.make_resnet18(num_classes=7)
+    params = model.init(jax.random.PRNGKey(0))
+    x = jnp.ones((1, 3, 64, 64))
+    shapes = model.feature_shapes(64)
+    for k in model.split_after:
+        feat = cnn_lib.forward(model, params, x, upto=k + 1)
+        assert tuple(feat.shape[1:]) == tuple(shapes[k]), (k, feat.shape)
+
+
+def test_ae_training_reduces_loss():
+    model = cnn_lib.make_resnet18(num_classes=5, width=0.25)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def data_iter():
+        k = 0
+        while True:
+            x, y = synthetic_image_batch(jax.random.PRNGKey(k), 8, 32,
+                                         n_classes=5)
+            yield x, y
+            k += 1
+
+    split = model.split_after[0]
+    ch = model.feature_shapes(32)[split][0]
+    ae, _, logs = train_autoencoder(
+        jax.random.PRNGKey(1), model, params, split, data_iter(),
+        ch=ch, ch_prime=max(1, ch // 4), steps=25, lr=1e-3)
+    first = np.mean([l["l2"] for l in logs[:5]])
+    last = np.mean([l["l2"] for l in logs[-5:]])
+    assert last < first
+
+
+def test_ae_quantized_roundtrip_close():
+    ae = init_autoencoder(jax.random.PRNGKey(0), 16, 16)
+    # near-orthogonal init at same width won't be identity, but roundtrip
+    # must at least be finite and the quantized path close to unquantized
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 4, 4))
+    r_f = roundtrip(ae, x, bits=None)
+    r_q = roundtrip(ae, x, bits=8)
+    assert float(jnp.max(jnp.abs(r_f - r_q))) < 0.1 * float(
+        jnp.max(jnp.abs(r_f)) + 1)

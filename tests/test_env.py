@@ -1,0 +1,138 @@
+"""MEC environment invariants (paper §3-4) + Theorem 1 empirical check."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cnn import make_resnet18
+from repro.core.split import cnn_split_table
+from repro.env.channel import channel_gain, uplink_rates
+from repro.env.mecenv import MECEnv, make_env_params
+
+
+@pytest.fixture(scope="module")
+def env():
+    plan = cnn_split_table(make_resnet18(101), 224)
+    return MECEnv(make_env_params(plan, n_ue=5, n_channels=2))
+
+
+def test_reset_shapes(env):
+    s = env.reset(jax.random.PRNGKey(0))
+    assert s.k.shape == (5,)
+    assert env.observe(s).shape == (env.obs_dim,)
+    assert bool(jnp.all(s.k >= 0))
+
+
+def test_rate_interference_monotone():
+    """More interferers on my channel => lower rate (Eq. 5)."""
+    g = channel_gain(jnp.array([50.0, 50.0, 50.0]))
+    omega = jnp.array([1e6, 1e6])
+    sigma = jnp.array([1e-9, 1e-9])
+    p = jnp.array([0.3, 0.3, 0.3])
+    c_alone = jnp.array([0, 1, 1])
+    c_crowd = jnp.array([0, 0, 0])
+    r_alone = uplink_rates(p, c_alone, g, jnp.array([True] * 3),
+                           omega=omega, sigma=sigma)
+    r_crowd = uplink_rates(p, c_crowd, g, jnp.array([True] * 3),
+                           omega=omega, sigma=sigma)
+    assert float(r_alone[0]) > float(r_crowd[0])
+    # non-transmitting UEs don't interfere
+    r_quiet = uplink_rates(p, c_crowd, g, jnp.array([True, False, False]),
+                           omega=omega, sigma=sigma)
+    assert float(r_quiet[0]) == pytest.approx(float(r_alone[0]), rel=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 5), st.integers(0, 1),
+       st.floats(0.01, 0.5))
+def test_step_invariants(seed, b, c, p):
+    plan = cnn_split_table(make_resnet18(101), 224)
+    env = MECEnv(make_env_params(plan, n_ue=3, n_channels=2))
+    s = env.reset(jax.random.PRNGKey(seed))
+    n = env.params.n_ue
+    bb = jnp.full((n,), b, jnp.int32)
+    cc = jnp.full((n,), c, jnp.int32)
+    pp = jnp.full((n,), p)
+    s2, reward, done, info = env.step(s, bb, cc, pp)
+    # tasks never increase (unless auto-reset fired)
+    if not bool(done):
+        assert bool(jnp.all(s2.k <= s.k))
+        assert bool(jnp.all(s2.k >= 0))
+    assert float(info["energy"]) >= 0
+    assert float(info["completed"]) >= 0
+    assert float(reward) <= 0  # reward is negative overhead
+    assert bool(jnp.all(s2.l >= -1e-6))
+    assert bool(jnp.all(s2.n >= 0))
+
+
+def test_local_policy_completes_all_tasks(env):
+    """Running b=B+1 long enough finishes the episode (done=True seen)."""
+    s = env.reset(jax.random.PRNGKey(1), eval_mode=True)
+    n = env.params.n_ue
+    b = jnp.full((n,), env.n_actions_b - 1, jnp.int32)
+    c = jnp.zeros((n,), jnp.int32)
+    p = jnp.full((n,), 0.05)
+    total_completed = 0.0
+    done_seen = False
+    for _ in range(40):  # 200 tasks x 63ms / 0.5s ~ 26 frames
+        s, r, done, info = env.step(s, b, c, p)
+        total_completed += float(info["completed"])
+        if bool(done):
+            done_seen = True
+            break
+    assert done_seen
+    assert total_completed == pytest.approx(200 * n, abs=1)
+
+
+def test_offload_faster_than_local_when_alone(env):
+    """A single offloading UE at moderate distance beats local (the paper's
+    core premise given the compressor)."""
+    plan = cnn_split_table(make_resnet18(101), 224)
+    env1 = MECEnv(make_env_params(plan, n_ue=1, n_channels=2))
+    s = env1.reset(jax.random.PRNGKey(0), eval_mode=True)
+    # split b=1 with decent power
+    s1, r_off, _, i_off = env1.step(s, jnp.array([1]), jnp.array([0]),
+                                    jnp.array([0.3]))
+    s = env1.reset(jax.random.PRNGKey(0), eval_mode=True)
+    s2, r_loc, _, i_loc = env1.step(s, jnp.array([env1.n_actions_b - 1]),
+                                    jnp.array([0]), jnp.array([0.3]))
+    assert float(i_off["completed"]) > float(i_loc["completed"])
+
+
+def test_theorem1_p2_ordering_implies_p1():
+    """Theorem 1 (empirical): among random policies, better P2 objective
+    (our per-frame reward sum) implies better P1 (makespan + beta*energy)
+    for small beta."""
+    plan = cnn_split_table(make_resnet18(101), 224)
+    env = MECEnv(make_env_params(plan, n_ue=3, n_channels=2, beta=0.01))
+    results = []
+    for seed in range(6):
+        key = jax.random.PRNGKey(100 + seed)
+        s = env.reset(jax.random.PRNGKey(0), eval_mode=True)
+        f2 = 0.0
+        frames = 0
+        energy = 0.0
+        done = False
+        kb, kc, kp = jax.random.split(key, 3)
+        b = jax.random.randint(kb, (3,), 0, env.n_actions_b)
+        c = jax.random.randint(kc, (3,), 0, 2)
+        p = jax.random.uniform(kp, (3,), minval=0.05, maxval=0.5)
+        for _ in range(200):
+            s, r, done, info = env.step(s, b, c, p)
+            f2 -= float(r)
+            energy += float(info["energy"])
+            frames += 1
+            if bool(done):
+                break
+        if not bool(done):
+            continue
+        f1 = frames * 0.5 + 0.01 * energy  # makespan + beta*energy
+        results.append((f2, f1))
+    assert len(results) >= 3
+    results.sort()
+    f1s = [f1 for _, f1 in results]
+    # rank correlation: best-P2 policy should not be the worst-P1 policy
+    assert f1s[0] <= f1s[-1] + 1e-6
+    rho = np.corrcoef([f2 for f2, _ in results], f1s)[0, 1]
+    assert rho > 0.0

@@ -1,0 +1,38 @@
+"""Task conservation: across an episode, completed tasks exactly exhaust the
+initial queues (no task lost or double-counted), for arbitrary policies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cnn import make_resnet18
+from repro.core.split import cnn_split_table
+from repro.env.mecenv import MECEnv, make_env_params
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_completed_tasks_conserved(seed):
+    plan = cnn_split_table(make_resnet18(101), 224)
+    env = MECEnv(make_env_params(plan, n_ue=3, n_channels=2, lam_tasks=20.0))
+    key = jax.random.PRNGKey(seed)
+    s = env.reset(key)
+    initial = float(s.k.sum())
+    done = False
+    completed = 0.0
+    rng = np.random.RandomState(seed % 2**31)
+    for _ in range(400):
+        b = jnp.asarray(rng.randint(0, env.n_actions_b, 3), jnp.int32)
+        c = jnp.asarray(rng.randint(0, env.n_channels, 3), jnp.int32)
+        p = jnp.asarray(rng.uniform(0.05, 0.5, 3), jnp.float32)
+        s, r, done, info = env.step(s, b, c, p)
+        completed += float(info["completed"])
+        if bool(done):
+            break
+    assert bool(done), "episode should terminate under any policy"
+    assert completed == pytest_approx(initial), (completed, initial)
+
+
+def pytest_approx(x):
+    import pytest
+    return pytest.approx(x, abs=1.0)

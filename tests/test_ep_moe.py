@@ -1,0 +1,51 @@
+"""Expert-parallel shard_map MoE must agree with the pure-GSPMD global
+dispatch. Runs in a subprocess with 8 forced host devices (the main test
+process keeps 1 device — see conftest note)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models import meshctx
+from repro.models.moe import (_apply_moe_global, apply_moe_ep,
+                              apply_moe_ep_decode, init_moe)
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+cfg = ModelConfig(
+    name="t", family="moe", n_layers=1, d_model=32, n_heads=2, n_kv_heads=1,
+    d_ff=64, vocab_size=32, block_pattern=("moe",),
+    moe=MoEConfig(n_experts=8, top_k=2, d_expert=16, capacity_factor=8.0,
+                  n_shared_experts=1),
+    param_dtype="float32", compute_dtype="float32", fsdp=True)
+p = init_moe(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 32)) * 0.5
+
+ref, aux_ref = _apply_moe_global(p, x, cfg)
+with meshctx.use_mesh(mesh):
+    out_ep, aux_ep = jax.jit(lambda p, x: apply_moe_ep(p, x, cfg, mesh))(p, x)
+    out_dec, aux_dec = jax.jit(
+        lambda p, x: apply_moe_ep_decode(p, x, cfg, mesh))(p, x)
+
+for name, out in (("ep", out_ep), ("ep_decode", out_dec)):
+    err = float(jnp.max(jnp.abs(out - ref)))
+    rel = err / (float(jnp.max(jnp.abs(ref))) + 1e-9)
+    assert rel < 2e-3, f"{name} mismatch rel={rel}"
+    print(name, "ok", rel)
+print("ALL_OK")
+"""
+
+
+@pytest.mark.slow
+def test_ep_matches_global_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    res = subprocess.run([sys.executable, "-c", _SCRIPT], cwd=os.getcwd(),
+                         env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert "ALL_OK" in res.stdout, res.stdout + "\n" + res.stderr

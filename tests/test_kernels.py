@@ -1,0 +1,89 @@
+"""Per-kernel shape/dtype sweeps, allclose vs the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("shape", [(17, 130), (256, 512), (3, 5, 384)])
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantize_matches_ref(shape, bits, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(0), shape) * 3).astype(dtype)
+    q1 = ops.quantize(x, -9.0, 9.0, bits=bits)
+    q2 = ref.quantize_ref(x, -9.0, 9.0, bits=bits)
+    # rounding of values exactly at .5 boundaries may differ by 1 code in
+    # low-precision dtypes; require exactness in f32
+    if dtype == jnp.float32:
+        assert jnp.all(q1 == q2)
+    else:
+        assert jnp.max(jnp.abs(q1.astype(jnp.int32) - q2.astype(jnp.int32))) <= 1
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_dequantize_matches_ref(bits):
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 257)) * 2
+    q = ref.quantize_ref(x, -7.0, 7.0, bits=bits)
+    d1 = ops.dequantize(q, -7.0, 7.0, bits=bits)
+    d2 = ref.dequantize_ref(q, -7.0, 7.0, bits=bits)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_quant_roundtrip_error_bound():
+    """Round-off error is bounded by half a quantization step (Eq. 1-2)."""
+    x = jax.random.uniform(jax.random.PRNGKey(2), (128, 256),
+                           minval=-5.0, maxval=5.0)
+    for bits in (4, 8):
+        q = ops.quantize(x, -5.0, 5.0, bits=bits)
+        d = ops.dequantize(q, -5.0, 5.0, bits=bits)
+        step = 10.0 / ((1 << bits) - 1)
+        assert float(jnp.max(jnp.abs(d - x))) <= step / 2 + 1e-5
+
+
+@pytest.mark.parametrize("t,d,dp", [(64, 128, 32), (513, 384, 96),
+                                    (100, 260, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bottleneck_encode(t, d, dp, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(3), (t, d), dtype)
+    w = (jax.random.normal(jax.random.PRNGKey(4), (d, dp)) * 0.05).astype(dtype)
+    b1 = ops.bottleneck_encode(x, w, -4.0, 4.0)
+    b2 = ref.bottleneck_encode_ref(x, w, -4.0, 4.0)
+    diff = jnp.abs(b1.astype(jnp.int32) - b2.astype(jnp.int32))
+    assert int(diff.max()) <= 1  # .5-boundary rounding tolerance
+
+
+@pytest.mark.parametrize("s", [64, 257, 1024])
+@pytest.mark.parametrize("hkv,g", [(2, 4), (1, 8), (4, 1)])
+def test_decode_attention(s, hkv, g):
+    key = jax.random.PRNGKey(5)
+    b, d = 2, 64
+    q = jax.random.normal(key, (b, hkv * g, d))
+    k = jax.random.normal(jax.random.PRNGKey(6), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.PRNGKey(7), (b, s, hkv, d))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    pos = jnp.where(pos % 5 == 2, -1, pos)
+    idx = s - 10
+    o1 = ops.decode_attention(q, k, v, pos, idx)
+    o2 = ref.decode_attention_ref(q, k, v, pos, idx)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_matches_model_flash():
+    """Kernel oracle agrees with the model's chunked flash attention."""
+    from repro.models.attention import flash_attention
+    b, s, hkv, g, d = 2, 128, 2, 2, 32
+    q = jax.random.normal(jax.random.PRNGKey(8), (b, 1, hkv * g, d))
+    k = jax.random.normal(jax.random.PRNGKey(9), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.PRNGKey(10), (b, s, hkv, d))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    idx = s - 1
+    o_flash = flash_attention(
+        q, k, v, q_positions=jnp.full((b, 1), idx),
+        k_positions=pos, causal=True, chunk=64)
+    o_ref = ref.decode_attention_ref(q[:, 0], k, v, pos, idx)
+    np.testing.assert_allclose(np.asarray(o_flash[:, 0]), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,56 @@
+"""int8 KV-cache (paper Eq. 1 applied to the serving cache)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import reduced
+from repro.models import apply_model, decode_step, init_params, prefill
+from repro.models.cache import dequantize_kv, quantize_kv
+
+
+def test_quantize_kv_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 7, 3, 16))
+    codes, scale = quantize_kv(x, 8)
+    assert codes.dtype == jnp.int8
+    xr = dequantize_kv(codes, scale, jnp.float32)
+    # error bounded by half a step of the per-(token, head) scale
+    err = jnp.abs(xr - x)
+    bound = scale[..., None] * 0.5 + 1e-6
+    assert bool(jnp.all(err <= bound))
+
+
+def test_kv8_decode_close_to_full():
+    cfg = reduced(get_config("qwen2-7b")).replace(kv_quant_bits=8)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 21
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, s + 1), 0,
+                              cfg.vocab_size)
+    full, _, _ = apply_model(params, cfg, toks, mode="train")
+    _, cache = prefill(params, cfg, toks[:, :s], attn_len=s + 1)
+    dec, cache = decode_step(params, cfg, cache, toks[:, s:s + 1],
+                             jnp.int32(s))
+    ref = full[:, s]
+    rel = float(jnp.max(jnp.abs(ref - dec))) / (
+        float(jnp.max(jnp.abs(ref))) + 1e-9)
+    assert rel < 0.05, rel
+    # cache stores int8 codes
+    leaves = jax.tree_util.tree_leaves(cache)
+    assert any(l.dtype == jnp.int8 for l in leaves)
+
+
+def test_kv8_multi_step_stable():
+    cfg = reduced(get_config("qwen3-1.7b")).replace(kv_quant_bits=8)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    b, s = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(3), (b, s + 4), 0,
+                              cfg.vocab_size)
+    full, _, _ = apply_model(params, cfg, toks, mode="train")
+    _, cache = prefill(params, cfg, toks[:, :s], attn_len=s + 4)
+    for i in range(4):
+        dec, cache = decode_step(params, cfg, cache, toks[:, s + i:s + i + 1],
+                                 jnp.int32(s + i))
+        ref = full[:, s + i]
+        rel = float(jnp.max(jnp.abs(ref - dec))) / (
+            float(jnp.max(jnp.abs(ref))) + 1e-9)
+        assert rel < 0.08, (i, rel)

@@ -1,0 +1,66 @@
+"""SSD intra-chunk Pallas kernel vs oracle, and vs the model's ssd_chunked."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("q,h,p,n", [(16, 2, 8, 8), (32, 4, 16, 8),
+                                     (64, 2, 32, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_intra_matches_ref(q, h, p, n, dtype):
+    b, nc = 2, 2
+    key = jax.random.PRNGKey(0)
+    xh = jax.random.normal(key, (b, nc, q, h, p)).astype(dtype)
+    dt = jax.nn.softplus(
+        jax.random.normal(jax.random.PRNGKey(1), (b, nc, q, h)))
+    la = -jnp.cumsum(dt * 0.3, axis=2)
+    B = jax.random.normal(jax.random.PRNGKey(2), (b, nc, q, n)).astype(dtype)
+    C = jax.random.normal(jax.random.PRNGKey(3), (b, nc, q, n)).astype(dtype)
+    y1 = ops.ssd_intra(xh, dt, la, B, C)
+    y2 = ref.ssd_intra_ref(xh.astype(jnp.float32), dt, la,
+                           B.astype(jnp.float32), C.astype(jnp.float32))
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=tol, atol=tol)
+
+
+def test_ssd_intra_consistent_with_model():
+    """Kernel + inter-chunk recurrence reproduces models/ssm.ssd_chunked."""
+    from repro.models.ssm import ssd_chunked
+    b, l, h, p, n, chunk = 1, 48, 2, 8, 8, 16
+    key = jax.random.PRNGKey(4)
+    xh = jax.random.normal(key, (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(5), (b, l, h)))
+    a_log = -0.4 * dt
+    B = jax.random.normal(jax.random.PRNGKey(6), (b, l, n))
+    C = jax.random.normal(jax.random.PRNGKey(7), (b, l, n))
+    y_model, _ = ssd_chunked(xh, dt, a_log, B, C, chunk)
+
+    nc = l // chunk
+    xc = xh.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    lac = jnp.cumsum(a_log.reshape(b, nc, chunk, h), axis=2)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+    y_intra = ops.ssd_intra(xc, dtc, lac, Bc, Cc)
+    # reconstruct inter part with the model's math
+    last = lac[:, :, -1:, :]
+    st = jnp.einsum("bcqh,bcqn,bcqhp->bchpn",
+                    jnp.exp(last - lac) * dtc, Bc, xc)
+    dec = jnp.exp(lac[:, :, -1, :])
+
+    def step(hprev, inp):
+        d, s = inp
+        return hprev * d[:, :, None, None] + s, hprev
+
+    h0 = jnp.zeros((b, h, p, n))
+    _, hstart = jax.lax.scan(step, h0, (dec.transpose(1, 0, 2),
+                                        st.transpose(1, 0, 2, 3, 4)))
+    hstart = hstart.transpose(1, 0, 2, 3, 4)
+    y_inter = jnp.einsum("bcqh,bcqn,bchpn->bcqhp", jnp.exp(lac), Cc, hstart)
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_model),
+                               rtol=1e-4, atol=1e-4)
