@@ -1,0 +1,92 @@
+"""Heterogeneous-fleet scheduling: learned MAHPPO policy vs heuristics on a
+mixed 4-UE fleet (ResNet18 on Jetson, ResNet18 on an IoT-class SoC, and two
+reduced-transformer UEs on phone NPUs), per-UE split tables throughout.
+
+Also times the jitted training iteration on homogeneous vs mixed fleets of
+the same size — the per-UE gather must not regress the hot path.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.fleets import make_mixed_fleet
+from repro.core.cnn import make_resnet18
+from repro.core.split import cnn_split_table, homogeneous_fleet
+from repro.env.mecenv import MECEnv, make_env_params
+from repro.rl.baselines import local_policy_eval, random_policy_eval
+from repro.rl.heuristics import greedy_eval
+from repro.rl.mahppo import (MAHPPOConfig, evaluate_policy, init_agent,
+                             make_train_fns, train_mahppo)
+
+
+def _iter_us(env, cfg, n_timed=3):
+    """Steady-state wall time of ONE jitted MAHPPO iteration: reuse the same
+    compiled `iteration` for warm-up and timing so compilation is excluded."""
+    from repro.optim import adamw_init
+    key = jax.random.PRNGKey(0)
+    agent = init_agent(key, env)
+    opt = adamw_init(agent)
+    states = jax.vmap(env.reset)(jax.random.split(key, cfg.n_envs))
+    iteration = make_train_fns(env, cfg)
+    agent, opt, key, states, m = iteration(agent, opt, key, states)
+    jax.block_until_ready(m)                # compile + first run
+    t0 = time.time()
+    for _ in range(n_timed):
+        agent, opt, key, states, m = iteration(agent, opt, key, states)
+    jax.block_until_ready(m)
+    return (time.time() - t0) * 1e6 / n_timed
+
+
+def run(quick=True):
+    iters = 30 if quick else 120
+    fleet = make_mixed_fleet()
+    env = MECEnv(make_env_params(fleet, n_channels=2))
+    cfg = MAHPPOConfig(iterations=iters, horizon=1024, n_envs=8)
+
+    t0 = time.time()
+    agent, hist = train_mahppo(env, cfg, seed=0)
+    train_s = time.time() - t0
+    beta = float(env.params.beta)
+
+    ev = evaluate_policy(env, agent, frames=64)
+    rows = [{"policy": "mahppo", "t_task": ev["t_task"],
+             "e_task": ev["e_task"],
+             "overhead": ev["t_task"] + beta * ev["e_task"],
+             "reward": ev["reward"]}]
+    gr = greedy_eval(env)
+    rows.append({"policy": "greedy", "t_task": gr["t_task"],
+                 "e_task": gr["e_task"], "overhead": gr["overhead"],
+                 "reward": float("nan")})
+    lo = local_policy_eval(env, frames=64)
+    rows.append({"policy": "local", "t_task": lo["t_task"],
+                 "e_task": lo["e_task"],
+                 "overhead": lo["t_task"] + beta * lo["e_task"],
+                 "reward": lo["reward"]})
+    ra = random_policy_eval(env, frames=64)
+    rows.append({"policy": "random", "t_task": float("nan"),
+                 "e_task": float("nan"), "overhead": float("nan"),
+                 "reward": ra["reward"]})
+
+    # hot-path regression guard: mixed fleet vs homogeneous fleet, same N
+    tcfg = MAHPPOConfig(horizon=512, n_envs=4, reuse=2)
+    homo = homogeneous_fleet(cnn_split_table(make_resnet18(101), 224), 4)
+    us_homo = _iter_us(MECEnv(make_env_params(homo, n_channels=2)), tcfg)
+    us_mixed = _iter_us(env, tcfg)
+    return {"rows": rows, "train_s": train_s,
+            "final_reward": float(np.mean([h["reward_mean"]
+                                           for h in hist[-5:]])),
+            "iter_us_homogeneous": us_homo, "iter_us_mixed": us_mixed}
+
+
+if __name__ == "__main__":
+    out = run()
+    print(f"final_reward={out['final_reward']:.4f} "
+          f"(train {out['train_s']:.1f}s)")
+    for r in out["rows"]:
+        print({k: round(v, 4) if isinstance(v, float) else v
+               for k, v in r.items()})
+    print(f"iteration: homogeneous {out['iter_us_homogeneous']/1e3:.1f} ms, "
+          f"mixed {out['iter_us_mixed']/1e3:.1f} ms")

@@ -133,6 +133,18 @@ def main() -> None:
             _emit(f"fig12_beta{r['beta']}", us,
                   f"t_ms={r['t_ms']:.1f};e_mJ={r['e_mJ']:.1f}")
 
+    if want("hetero"):
+        _section("heterogeneous fleet (mixed backbones + device tiers)")
+        from benchmarks import bench_hetero_fleet
+        out = bench_hetero_fleet.run(quick=quick)
+        results["hetero"] = out
+        for r in out["rows"]:
+            _emit(f"hetero_{r['policy']}", 0.0,
+                  f"t_ms={1e3*r['t_task']:.1f};e_mJ={1e3*r['e_task']:.1f};"
+                  f"overhead={r['overhead']:.4f};reward={r['reward']:.4f}")
+        _emit("hetero_iter_us", out["iter_us_mixed"],
+              f"homogeneous_us={out['iter_us_homogeneous']:.0f}")
+
     if want("archs"):
         _section("fig13 other backbones (+ assigned archs)")
         from benchmarks import bench_archs

@@ -2,4 +2,6 @@
 # compression (autoencoder + quantization) + the overhead/split model that
 # feeds the MAHPPO scheduler (repro.rl) through the MEC env (repro.env).
 from repro.core.compressor import (compression_rate, dequantize, quantize)
-from repro.core.split import SplitPlan, split_table
+from repro.core.fleets import make_mixed_fleet
+from repro.core.split import (FleetPlan, SplitPlan, build_fleet,
+                              homogeneous_fleet, split_table)

@@ -1,0 +1,25 @@
+"""Canonical demo fleets. The mixed 4-UE fleet below is shared by
+``examples/collaborative_serve.py --fleet`` and
+``benchmarks/bench_hetero_fleet.py`` so the demo, the benchmark, and the
+docs all describe the same scenario."""
+from __future__ import annotations
+
+from repro.core import overhead as oh
+from repro.core.cnn import make_resnet18
+from repro.core.split import (FleetPlan, build_fleet, cnn_split_table,
+                              transformer_split_table)
+
+
+def make_mixed_fleet(arch: str = "qwen3-1.7b") -> FleetPlan:
+    """ResNet18 on a Jetson, ResNet18 on an IoT-class SoC, and two
+    reduced-transformer UEs on phone NPUs — each split table built for the
+    device that runs it."""
+    from repro.configs import get_config
+    cnn = make_resnet18(101)
+    tcfg = get_config(arch)
+    plans = [cnn_split_table(cnn, 224, dev=oh.JETSON_NANO),
+             cnn_split_table(cnn, 224, dev=oh.IOT_SOC),
+             transformer_split_table(tcfg, ue_dev=oh.PHONE_NPU),
+             transformer_split_table(tcfg, ue_dev=oh.PHONE_NPU)]
+    return build_fleet(plans, [oh.JETSON_NANO, oh.IOT_SOC,
+                               oh.PHONE_NPU, oh.PHONE_NPU])

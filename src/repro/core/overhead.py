@@ -37,8 +37,28 @@ JETSON_NANO = DeviceModel("jetson-nano", 7.2e10, 2.56e10 * 0.6, 2.1, 4e9)
 # A beefier UE tier (phone-class NPU) used for transformer-UE experiments.
 PHONE_NPU = DeviceModel("phone-npu", 2.0e12, 5.0e10, 3.0, 8e9)
 
+# Low-end IoT tier (Pi-Zero-class SoC): ~5 GFLOP/s effective, slow LPDDR2,
+# little headroom above idle, 512 MB — most transformer splits are infeasible.
+IOT_SOC = DeviceModel("iot-soc", 5.0e9, 2.0e9, 0.8, 5.12e8)
+
 # TPU v5e edge chip (the "edge server" of the lifted scenario).
 TPU_V5E = DeviceModel("tpu-v5e", 197e12 * 0.5, 819e9, 170.0, 16e9)
+
+UE_TIERS = {d.name: d for d in (JETSON_NANO, PHONE_NPU, IOT_SOC)}
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """Per-UE runtime profile the scheduler consumes: the device the UE's
+    split table was built for plus the compute power draw the MEC env charges
+    for local seconds (paper's P_compute; was a single global scalar)."""
+    name: str
+    p_compute: float            # W charged per local compute second
+    device: DeviceModel = JETSON_NANO
+
+    @classmethod
+    def from_device(cls, dev: DeviceModel) -> "DeviceProfile":
+        return cls(dev.name, dev.active_power, dev)
 
 
 def module_time_energy(flops: float, bytes_moved: float, dev: DeviceModel):

@@ -21,7 +21,7 @@ consumes. Architecture-family constraints (DESIGN.md §6):
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -41,17 +41,117 @@ class SplitPlan:
     e_comp: np.ndarray
     f_bits: np.ndarray           # offload payload (bits); 0 for b = B+1
     feasible: np.ndarray         # bool (B+2,)
+    device: Optional[str] = None  # UE device the tables were built for
 
     @property
     def n_actions(self):
         return len(self.f_bits)
 
 
-def _finalize(name, points, rows, full_bits_zero=True):
+def _finalize(name, points, rows, device=None):
     t_l, e_l, t_c, e_c, fb, feas = (np.array([r[i] for r in rows])
                                     for i in range(6))
+    if t_l[0] != 0.0:
+        raise ValueError(f"{name}: raw offload (b=0) must cost no UE compute")
+    if np.any(np.diff(t_l[1:-1]) < -1e-9):
+        raise ValueError(f"{name}: cumulative t_local must be monotone over "
+                         f"split points, got {t_l[1:-1]}")
+    if fb[-1] != 0.0:
+        raise ValueError(f"{name}: full-local (b=B+1) must offload 0 bits")
     return SplitPlan(name, points, t_l, e_l, t_c, e_c, fb,
-                     feas.astype(bool))
+                     feas.astype(bool), device=device)
+
+
+# ------------------------------------------------------------------- fleets
+@dataclasses.dataclass
+class FleetPlan:
+    """Per-UE split tables for a heterogeneous fleet, padded to a shared
+    action space. Layout of each (B_max+2,) row: index 0 = raw offload,
+    indices 1..B = that UE's split points, then infeasible padding, and the
+    LAST index is always full-local — so b = n_actions-1 means "run locally"
+    for every UE regardless of how many split points its backbone exposes."""
+    names: List[str]
+    profiles: List[oh.DeviceProfile]
+    t_local: np.ndarray          # (N, B_max+2)
+    e_local: np.ndarray
+    t_comp: np.ndarray
+    e_comp: np.ndarray
+    f_bits: np.ndarray
+    feasible: np.ndarray         # (N, B_max+2) bool; False on padding
+    p_compute: np.ndarray        # (N,) W per local compute second
+
+    @property
+    def n_ue(self):
+        return len(self.names)
+
+    @property
+    def n_actions(self):
+        return self.t_local.shape[1]
+
+
+def _pad_row(vals: np.ndarray, width: int, fill=0.0) -> np.ndarray:
+    """Pad a (B+2,) table to (width,) keeping the last entry (full-local)
+    last; padding goes between the split points and full-local."""
+    out = np.full((width,), fill, dtype=np.float64)
+    out[: len(vals) - 1] = vals[:-1]
+    out[-1] = vals[-1]
+    return out
+
+
+def build_fleet(plans: Sequence[SplitPlan],
+                profiles: Optional[Sequence[Union[oh.DeviceProfile,
+                                                  oh.DeviceModel]]] = None
+                ) -> FleetPlan:
+    """Stack an arbitrary mix of SplitPlans (different backbones, different
+    B) into per-UE tables. Padded action slots are marked infeasible and cost
+    nothing, so a policy that respects the mask never sees them."""
+    if not plans:
+        raise ValueError("build_fleet needs at least one SplitPlan")
+    if profiles is None:
+        profiles = [oh.DeviceProfile.from_device(oh.JETSON_NANO)] * len(plans)
+    if len(profiles) != len(plans):
+        raise ValueError(f"{len(plans)} plans but {len(profiles)} profiles")
+    profiles = [p if isinstance(p, oh.DeviceProfile)
+                else oh.DeviceProfile.from_device(p) for p in profiles]
+    for plan, prof in zip(plans, profiles):
+        if plan.device is not None and prof.device.name != plan.device:
+            raise ValueError(
+                f"plan '{plan.name}' has tables built for {plan.device} but "
+                f"its profile is {prof.device.name}; rebuild the split table "
+                f"with dev/ue_dev={prof.device.name}")
+    width = max(p.n_actions for p in plans)
+    stack = {f: np.stack([_pad_row(getattr(p, f), width) for p in plans])
+             for f in ("t_local", "e_local", "t_comp", "e_comp", "f_bits")}
+    feas = np.zeros((len(plans), width), dtype=bool)
+    for i, p in enumerate(plans):
+        feas[i, : p.n_actions - 1] = p.feasible[:-1]
+        feas[i, -1] = p.feasible[-1]
+    return FleetPlan(
+        names=[p.name for p in plans], profiles=list(profiles),
+        feasible=feas,
+        p_compute=np.array([pr.p_compute for pr in profiles]), **stack)
+
+
+def homogeneous_fleet(plan: SplitPlan, n_ue: int,
+                      profile: Optional[Union[oh.DeviceProfile,
+                                              oh.DeviceModel]] = None
+                      ) -> FleetPlan:
+    """The seed scenario as a special case: N identical plans/devices. The
+    default profile follows the device the plan was built for."""
+    if profile is None:
+        if plan.device is None:
+            dev = oh.JETSON_NANO
+        elif plan.device in oh.UE_TIERS:
+            dev = oh.UE_TIERS[plan.device]
+        else:
+            raise ValueError(
+                f"plan '{plan.name}' was built for '{plan.device}', which is "
+                f"not a known UE tier {sorted(oh.UE_TIERS)}; pass an explicit "
+                f"DeviceProfile")
+        prof = oh.DeviceProfile.from_device(dev)
+    else:
+        prof = profile
+    return build_fleet([plan] * n_ue, [prof] * n_ue)
 
 
 # --------------------------------------------------------------------- CNN
@@ -83,7 +183,7 @@ def cnn_split_table(model: CNNModel, in_size: int, *,
     fl = sum(flops) * batch
     t, e = oh.module_time_energy(fl, fl / 8, dev)
     rows.append((t, e, 0.0, 0.0, 0.0, True))
-    return _finalize(model.name, points, rows)
+    return _finalize(model.name, points, rows, device=dev.name)
 
 
 def cnn_jalad_table(model: CNNModel, in_size: int, *, dev=oh.JETSON_NANO,
@@ -109,7 +209,7 @@ def cnn_jalad_table(model: CNNModel, in_size: int, *, dev=oh.JETSON_NANO,
     fl = sum(flops) * batch
     t, e = oh.module_time_energy(fl, fl / 8, dev)
     rows.append((t, e, 0.0, 0.0, 0.0, True))
-    return _finalize(model.name + "-jalad", points, rows)
+    return _finalize(model.name + "-jalad", points, rows, device=dev.name)
 
 
 # ------------------------------------------------------------- transformers
@@ -179,7 +279,7 @@ def transformer_split_table(cfg: ModelConfig, *, seq_len=128,
     t, e = oh.module_time_energy(fl_full, fl_full / 4, ue_dev)
     total_pb = embed_pb + cum_pb[-1] + (emb["param_bytes"] - embed_pb)
     rows.append((t, e, 0.0, 0.0, 0.0, total_pb <= ue_dev.mem_bytes))
-    return _finalize(cfg.name, points, rows)
+    return _finalize(cfg.name, points, rows, device=ue_dev.name)
 
 
 def split_table(target, **kw) -> SplitPlan:

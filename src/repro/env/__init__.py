@@ -1,1 +1,2 @@
-from repro.env.mecenv import EnvParams, EnvState, MECEnv, make_env_params
+from repro.env.mecenv import (EnvParams, EnvState, MECEnv, make_env_params,
+                              per_ue)

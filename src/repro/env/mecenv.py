@@ -10,24 +10,29 @@ Frame dynamics are computed *analytically* (no inner loop): with the frame's
 rates fixed (Eq. 5 interference, per the paper), each UE finishes its
 carry-over task, then floor(T_rem / t_task) whole tasks, then starts one
 partial task. Fully vectorized over UEs and vmappable over parallel envs.
+
+UEs may be heterogeneous: the overhead tables l_new/n_new/feasible are
+(N, B_max+2) — one row per UE, built from a core.split.FleetPlan mixing
+backbones and device tiers — and p_compute is a (N,) vector. A single
+SplitPlan broadcasts to N identical rows, reproducing the seed scenario.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.split import SplitPlan
+from repro.core.split import FleetPlan, SplitPlan
 from repro.env.channel import channel_gain, uplink_rates
 
 
 class EnvParams(NamedTuple):
-    l_new: jnp.ndarray      # (B+2,) local+compression seconds per split
-    n_new: jnp.ndarray      # (B+2,) offload bits per split
-    feasible: jnp.ndarray   # (B+2,) bool
-    p_compute: jnp.ndarray  # scalar: UE compute power (W)
+    l_new: jnp.ndarray      # (N, B_max+2) local+compression seconds per split
+    n_new: jnp.ndarray      # (N, B_max+2) offload bits per split
+    feasible: jnp.ndarray   # (N, B_max+2) bool; False on padded actions
+    p_compute: jnp.ndarray  # (N,) per-UE compute power (W)
     t0: jnp.ndarray         # frame seconds
     beta: jnp.ndarray
     omega: jnp.ndarray      # (C,)
@@ -40,15 +45,36 @@ class EnvParams(NamedTuple):
     pathloss: jnp.ndarray
 
 
-def make_env_params(plan: SplitPlan, *, n_ue=5, n_channels=2, t0=0.5,
-                    beta=0.47, p_compute=2.1, omega=1e6, sigma=1e-9,
-                    p_max=0.5, lam_tasks=200.0, d_low=1.0, d_high=100.0,
-                    pathloss=3.0) -> EnvParams:
+def per_ue(table: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Gather each UE's own table entry: table (N, B+2), b (N,) -> (N,).
+    vmap-friendly (no dynamic shapes)."""
+    return jnp.take_along_axis(table, b[:, None], axis=1)[:, 0]
+
+
+def make_env_params(plan: Union[SplitPlan, FleetPlan], *, n_ue=5,
+                    n_channels=2, t0=0.5, beta=0.47, p_compute=None,
+                    omega=1e6, sigma=1e-9, p_max=0.5, lam_tasks=200.0,
+                    d_low=1.0, d_high=100.0, pathloss=3.0) -> EnvParams:
+    """A single SplitPlan is broadcast to n_ue identical UEs (the seed
+    homogeneous scenario); a FleetPlan supplies per-UE tables and device
+    power draws (n_ue/p_compute then come from the fleet)."""
+    if isinstance(plan, FleetPlan):
+        n_ue = plan.n_ue
+        l_new = jnp.asarray(plan.t_local + plan.t_comp, jnp.float32)
+        n_new = jnp.asarray(plan.f_bits, jnp.float32)
+        feasible = jnp.asarray(plan.feasible)
+        p_vec = jnp.asarray(plan.p_compute if p_compute is None
+                            else np.full((n_ue,), p_compute), jnp.float32)
+    else:
+        l_new = jnp.tile(jnp.asarray(plan.t_local + plan.t_comp,
+                                     jnp.float32)[None], (n_ue, 1))
+        n_new = jnp.tile(jnp.asarray(plan.f_bits, jnp.float32)[None],
+                         (n_ue, 1))
+        feasible = jnp.tile(jnp.asarray(plan.feasible)[None], (n_ue, 1))
+        p_vec = jnp.full((n_ue,), 2.1 if p_compute is None else p_compute,
+                         jnp.float32)
     return EnvParams(
-        l_new=jnp.asarray(plan.t_local + plan.t_comp, jnp.float32),
-        n_new=jnp.asarray(plan.f_bits, jnp.float32),
-        feasible=jnp.asarray(plan.feasible),
-        p_compute=jnp.float32(p_compute),
+        l_new=l_new, n_new=n_new, feasible=feasible, p_compute=p_vec,
         t0=jnp.float32(t0), beta=jnp.float32(beta),
         omega=jnp.full((n_channels,), omega, jnp.float32),
         sigma=jnp.full((n_channels,), sigma, jnp.float32),
@@ -71,7 +97,7 @@ class MECEnv:
 
     def __init__(self, params: EnvParams):
         self.params = params
-        self.n_actions_b = int(params.l_new.shape[0])
+        self.n_actions_b = int(params.l_new.shape[1])
         self.n_channels = int(params.omega.shape[0])
         self.obs_dim = 4 * params.n_ue
 
@@ -96,6 +122,7 @@ class MECEnv:
                                 s.d / 100.0])
 
     def action_mask(self):
+        """(N, B_max+2) per-UE feasibility; padded fleet actions are False."""
         return self.params.feasible
 
     def step(self, s: EnvState, b, c, p_tx):
@@ -105,8 +132,10 @@ class MECEnv:
         p_tx = jnp.clip(p_tx, 1e-4, prm.p_max)
         g = channel_gain(s.d, prm.pathloss)
         has_work = s.k > 0
+        l_new = per_ue(prm.l_new, b)
+        n_new = per_ue(prm.n_new, b)
         # a UE contributes interference if it offloads anything this frame
-        offloads = ((s.n > 0) | (prm.n_new[b] > 0)) & has_work
+        offloads = ((s.n > 0) | (n_new > 0)) & has_work
         r = uplink_rates(p_tx, c, g, offloads, omega=prm.omega,
                          sigma=prm.sigma)
         r = jnp.maximum(r, 1.0)  # avoid div-by-zero; 1 b/s floor
@@ -131,8 +160,6 @@ class MECEnv:
         k1 = s.k - done_carry
 
         # ---- phase 2: whole new tasks at the new split b
-        l_new = prm.l_new[b]
-        n_new = prm.n_new[b]
         t_task = l_new + n_new / r
         can = (k1 > 0) & (t_task > 0)
         m = jnp.where(can, jnp.floor(t_rem / jnp.maximum(t_task, 1e-9)), 0.0)

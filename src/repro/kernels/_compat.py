@@ -1,0 +1,6 @@
+"""Pallas-TPU API compatibility: jax renamed ``TPUCompilerParams`` to
+``CompilerParams``; resolve whichever this jax version provides."""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

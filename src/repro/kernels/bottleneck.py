@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 
 def _kernel(x_ref, w_ref, mn_ref, mx_ref, o_ref, acc_ref, *, bits, nk):
     k = pl.program_id(2)
@@ -64,7 +66,7 @@ def bottleneck_encode(x, w, mn, mx, *, bits=8, block=(256, 128, 512),
         out_shape=jax.ShapeDtypeStruct((t, dp), jnp.uint8 if bits <= 8
                                        else jnp.uint16),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w, scal(mn), scal(mx))

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -64,7 +66,7 @@ def ssd_intra(xh, dt, la, Bm, Cm, *, interpret=True):
                                lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
         out_shape=jax.ShapeDtypeStruct((b, nc, q, h, p), jnp.float32),
         scratch_shapes=[pltpu.VMEM((q, q), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(Cm, Bm, la, dt, xh)

@@ -138,6 +138,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
     rec.update(sizes)
     try:
         ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):   # older jax: one dict per program
+            ca = ca[0]
         rec["cost_analysis"] = {k: v for k, v in ca.items()
                                 if isinstance(v, (int, float))}
     except Exception as e:  # pragma: no cover

@@ -37,8 +37,11 @@ _COLL_RE = re.compile(
     r"(?:-start)?\(")
 _GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+# operands may be typed ("dot(f32[128,128]{1,0} %lhs, ...)") or bare
+# ("dot(%lhs, ...)") depending on the XLA version
 _DOT_RE = re.compile(
-    r"=\s*[\w]+\[([\d,]*)\][^=]*?\bdot\(\s*%([\w.\-]+),")
+    r"=\s*[\w]+\[([\d,]*)\][^=]*?\bdot\("
+    r"\s*(?:[\w]+\[[\d,]*\](?:\{[\d,]*\})?\s+)?%([\w.\-]+),")
 _LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 
 

@@ -5,11 +5,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.env.mecenv import MECEnv
+from repro.env.mecenv import MECEnv, per_ue
 
 
 def local_policy_eval(env: MECEnv, *, frames=64, seed=0):
-    """Always run fully locally (b = B+1)."""
+    """Always run fully locally (b = B+1; the last action for every UE in a
+    fleet by FleetPlan construction)."""
     b_local = env.n_actions_b - 1
 
     @jax.jit
@@ -22,8 +23,8 @@ def local_policy_eval(env: MECEnv, *, frames=64, seed=0):
             c = jnp.zeros((n,), jnp.int32)
             p = jnp.full((n,), 0.01)
             s2, reward, done, info = env.step(s, b, c, p)
-            t_task = env.params.l_new[b]
-            e_task = env.params.l_new[b] * env.params.p_compute
+            t_task = per_ue(env.params.l_new, b)
+            e_task = t_task * env.params.p_compute
             return s2, {"reward": reward, "t_task": t_task.mean(),
                         "e_task": e_task.mean(),
                         "completed": info["completed"]}
@@ -36,8 +37,10 @@ def local_policy_eval(env: MECEnv, *, frames=64, seed=0):
 
 
 def random_policy_eval(env: MECEnv, *, frames=64, seed=0):
-    mask = np.asarray(env.action_mask())
-    valid = np.where(mask)[0]
+    """Uniform over each UE's OWN feasible actions (padded/infeasible
+    entries carry -inf logits and are never drawn)."""
+    mask = jnp.asarray(env.action_mask())            # (N, B+2)
+    rand_logits = jnp.where(mask, 0.0, -jnp.inf)
 
     @jax.jit
     def rollout(key):
@@ -46,7 +49,8 @@ def random_policy_eval(env: MECEnv, *, frames=64, seed=0):
         def body(s, sub):
             n = env.params.n_ue
             kb, kc, kp = jax.random.split(sub, 3)
-            b = jnp.asarray(valid)[jax.random.randint(kb, (n,), 0, len(valid))]
+            b = jax.vmap(jax.random.categorical)(
+                jax.random.split(kb, n), rand_logits).astype(jnp.int32)
             c = jax.random.randint(kc, (n,), 0, env.n_channels)
             p = jax.random.uniform(kp, (n,), minval=0.01,
                                    maxval=env.params.p_max)

@@ -1,34 +1,38 @@
 """Non-RL scheduler baselines beyond the paper's Local/JALAD:
 
-* greedy: each UE independently picks argmin_b (t_b + beta * e_b) assuming a
-  clean channel (no interference awareness) at max power, round-robin
-  channels — what a non-coordinating heuristic would do.
+* greedy: each UE independently picks argmin_b (t_b + beta * e_b) over ITS
+  OWN split table assuming a clean channel (no interference awareness) at
+  max power, round-robin channels — what a non-coordinating heuristic would
+  do. Heterogeneous fleets naturally get per-UE answers.
 * oracle_static: exhaustive search over joint (b, c) assignments (max-power)
   for small N — the best *static* policy; the gap RL closes above it comes
-  from state-dependent scheduling.
+  from state-dependent scheduling. Each UE's b ranges over its own feasible
+  set (padded fleet actions are excluded).
 """
 from __future__ import annotations
 
 import itertools
+import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.env.channel import channel_gain, uplink_rates
-from repro.env.mecenv import MECEnv
+from repro.env.mecenv import MECEnv, per_ue
 
 
 def _joint_overhead(env: MECEnv, b, c, p, d):
     """Expected per-task latency/energy for each UE under joint actions."""
     prm = env.params
     g = channel_gain(jnp.asarray(d), prm.pathloss)
-    offl = prm.n_new[jnp.asarray(b)] > 0
+    l_b = per_ue(prm.l_new, jnp.asarray(b))
+    n_b = per_ue(prm.n_new, jnp.asarray(b))
+    offl = n_b > 0
     r = jnp.maximum(uplink_rates(jnp.asarray(p), jnp.asarray(c), g, offl,
                                  omega=prm.omega, sigma=prm.sigma), 1.0)
-    t = prm.l_new[jnp.asarray(b)] + prm.n_new[jnp.asarray(b)] / r
-    e = (prm.l_new[jnp.asarray(b)] * prm.p_compute
-         + (prm.n_new[jnp.asarray(b)] / r) * jnp.asarray(p))
+    t = l_b + n_b / r
+    e = l_b * prm.p_compute + (n_b / r) * jnp.asarray(p)
     return np.asarray(t), np.asarray(e)
 
 
@@ -37,24 +41,20 @@ def greedy_eval(env: MECEnv, *, d=50.0):
     prm = env.params
     n = prm.n_ue
     beta = float(prm.beta)
-    feas = np.asarray(prm.feasible)
-    # single-UE clean-channel overhead per b at p_max
+    feas = np.asarray(prm.feasible)                 # (N, B+2)
+    # clean-channel rate of a lone UE at p_max on channel 0: one value
+    # covers every (ue, b) cell, so score the whole table in one shot
     g = channel_gain(jnp.full((1,), d), prm.pathloss)
-    best_b, best_cost = 0, np.inf
-    for b in range(len(feas)):
-        if not feas[b]:
-            continue
-        r = float(jnp.maximum(uplink_rates(
-            jnp.full((1,), prm.p_max), jnp.zeros((1,), jnp.int32), g,
-            jnp.asarray([prm.n_new[b] > 0]), omega=prm.omega,
-            sigma=prm.sigma)[0], 1.0))
-        t = float(prm.l_new[b]) + float(prm.n_new[b]) / r
-        e = (float(prm.l_new[b]) * float(prm.p_compute)
-             + float(prm.n_new[b]) / r * float(prm.p_max))
-        cost = t + beta * e
-        if cost < best_cost:
-            best_b, best_cost = b, cost
-    b = [best_b] * n
+    r = float(jnp.maximum(uplink_rates(
+        jnp.full((1,), prm.p_max), jnp.zeros((1,), jnp.int32), g,
+        jnp.asarray([True]), omega=prm.omega, sigma=prm.sigma)[0], 1.0))
+    l_new = np.asarray(prm.l_new)
+    n_new = np.asarray(prm.n_new)
+    t = l_new + n_new / r
+    e = (l_new * np.asarray(prm.p_compute)[:, None]
+         + n_new / r * float(prm.p_max))
+    cost = np.where(feas, t + beta * e, np.inf)
+    b = [int(x) for x in np.argmin(cost, axis=1)]
     c = [i % env.n_channels for i in range(n)]
     p = [float(prm.p_max)] * n
     t, e = _joint_overhead(env, b, c, p, [d] * n)
@@ -67,15 +67,16 @@ def oracle_static_eval(env: MECEnv, *, d=50.0, max_joint=300_000):
     prm = env.params
     n = prm.n_ue
     beta = float(prm.beta)
-    feas = [i for i in range(len(np.asarray(prm.feasible)))
-            if bool(prm.feasible[i])]
+    feas_np = np.asarray(prm.feasible)
+    per_ue_feas = [list(np.where(feas_np[ue])[0]) for ue in range(n)]
     n_c = env.n_channels
-    space = len(feas) * n_c
-    if space ** n > max_joint:
-        raise ValueError(f"joint space too large: {space}^{n}")
+    spaces = [len(f) * n_c for f in per_ue_feas]
+    total = math.prod(spaces)                # exact Python int, no overflow
+    if total > max_joint:
+        raise ValueError(f"joint space too large: {spaces}")
     best = None
-    for combo in itertools.product(range(space), repeat=n):
-        b = [feas[x // n_c] for x in combo]
+    for combo in itertools.product(*(range(sp) for sp in spaces)):
+        b = [per_ue_feas[ue][x // n_c] for ue, x in enumerate(combo)]
         c = [x % n_c for x in combo]
         p = [float(prm.p_max)] * n
         t, e = _joint_overhead(env, b, c, p, [d] * n)

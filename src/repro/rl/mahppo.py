@@ -47,12 +47,20 @@ def init_agent(key, env: MECEnv):
 
 
 def _policy_all(actors, obs, mask):
-    """obs: (obs_dim,) -> per-actor (N,...) heads."""
-    return jax.vmap(lambda a: nets.actor_forward(a, obs, mask))(actors)
+    """obs: (obs_dim,); mask: (N, n_b) per-actor feasibility ->
+    per-actor (N, ...) heads."""
+    return jax.vmap(lambda a, m: nets.actor_forward(a, obs, m))(actors, mask)
+
+
+def _sample_all(keys, lb, lc, mu, ls, mask):
+    """keys/heads: (E, N, ...); mask: (N, n_b) shared across envs."""
+    per_env = jax.vmap(nets.sample_hybrid)          # over UEs, mask (N, n_b)
+    return jax.vmap(per_env, in_axes=(0, 0, 0, 0, 0, None))(
+        keys, lb, lc, mu, ls, mask)
 
 
 def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
-    mask = env.action_mask()
+    mask = env.action_mask()                         # (N, n_b) per-UE
     p_max = env.params.p_max
     n_ue = env.params.n_ue
 
@@ -63,7 +71,7 @@ def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
             lambda o: _policy_all(agent["actors"], o, mask))(obs)  # (E,N,..)
         keys = jax.random.split(key, obs.shape[0] * n_ue).reshape(
             obs.shape[0], n_ue, 2)
-        b, c, u = jax.vmap(jax.vmap(nets.sample_hybrid))(keys, lb, lc, mu, ls)
+        b, c, u = _sample_all(keys, lb, lc, mu, ls, mask)
         logp = jax.vmap(jax.vmap(nets.log_prob_hybrid))(lb, lc, mu, ls, b, c, u)
         value = jax.vmap(lambda o: nets.critic_forward(agent["critic"], o))(obs)
         p_tx = nets.exec_power(u, p_max)
@@ -190,24 +198,26 @@ def evaluate_policy(env: MECEnv, agent, *, frames=64, seed=0,
             obs = env.observe(s)
             lb, lc, mu, ls = _policy_all(agent["actors"], obs, mask)
             if deterministic:
-                b = jnp.argmax(lb, -1)
+                b = jnp.argmax(jnp.where(mask, lb, -jnp.inf), -1)
                 c = jnp.argmax(lc, -1)
                 u = mu
             else:
                 b, c, u = jax.vmap(nets.sample_hybrid)(
-                    jax.random.split(sub, n_ue), lb, lc, mu, ls)
+                    jax.random.split(sub, n_ue), lb, lc, mu, ls, mask)
             p_tx = nets.exec_power(u, p_max)
             s2, reward, done, info = env.step(s, b, c, p_tx)
             # realized per-task overhead under this frame's interference
             from repro.env.channel import channel_gain, uplink_rates
+            from repro.env.mecenv import per_ue
             g = channel_gain(s.d, env.params.pathloss)
-            offl = env.params.n_new[b] > 0
+            l_b = per_ue(env.params.l_new, b)
+            n_b = per_ue(env.params.n_new, b)
+            offl = n_b > 0
             r = jnp.maximum(uplink_rates(p_tx, c, g, offl,
                                          omega=env.params.omega,
                                          sigma=env.params.sigma), 1.0)
-            t_task = env.params.l_new[b] + env.params.n_new[b] / r
-            e_task = (env.params.l_new[b] * env.params.p_compute
-                      + (env.params.n_new[b] / r) * p_tx)
+            t_task = l_b + n_b / r
+            e_task = l_b * env.params.p_compute + (n_b / r) * p_tx
             # completion-weighted per-task overhead: a UE finishing 18 fast
             # offloaded tasks counts 18x, one slow local task counts once.
             w = jnp.where(t_task > 0, env.params.t0 / t_task, 0.0) * (s.k > 0)

@@ -65,7 +65,12 @@ def critic_forward(p, obs):
     return _mlp(p, obs)[..., 0]
 
 
-def sample_hybrid(key, logits_b, logits_c, mu, log_std):
+def sample_hybrid(key, logits_b, logits_c, mu, log_std, mask=None):
+    """mask: optional (n_b,) bool feasibility for THIS actor. actor_forward
+    already buries infeasible logits at -1e9; re-masking here guarantees
+    padded/infeasible splits are never sampled even from raw logits."""
+    if mask is not None:
+        logits_b = jnp.where(mask, logits_b, -1e9)
     kb, kc, kp = jax.random.split(key, 3)
     b = jax.random.categorical(kb, logits_b)
     c = jax.random.categorical(kc, logits_c)

@@ -3,7 +3,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# only test_step_invariants needs hypothesis; the other env invariants must
+# still run where it isn't installed
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = None
 
 from repro.core.cnn import make_resnet18
 from repro.core.split import cnn_split_table
@@ -43,27 +49,28 @@ def test_rate_interference_monotone():
     assert float(r_quiet[0]) == pytest.approx(float(r_alone[0]), rel=1e-6)
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(0, 2**31 - 1), st.integers(0, 5), st.integers(0, 1),
-       st.floats(0.01, 0.5))
-def test_step_invariants(seed, b, c, p):
-    plan = cnn_split_table(make_resnet18(101), 224)
-    env = MECEnv(make_env_params(plan, n_ue=3, n_channels=2))
-    s = env.reset(jax.random.PRNGKey(seed))
-    n = env.params.n_ue
-    bb = jnp.full((n,), b, jnp.int32)
-    cc = jnp.full((n,), c, jnp.int32)
-    pp = jnp.full((n,), p)
-    s2, reward, done, info = env.step(s, bb, cc, pp)
-    # tasks never increase (unless auto-reset fired)
-    if not bool(done):
-        assert bool(jnp.all(s2.k <= s.k))
-        assert bool(jnp.all(s2.k >= 0))
-    assert float(info["energy"]) >= 0
-    assert float(info["completed"]) >= 0
-    assert float(reward) <= 0  # reward is negative overhead
-    assert bool(jnp.all(s2.l >= -1e-6))
-    assert bool(jnp.all(s2.n >= 0))
+if given is not None:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(0, 5), st.integers(0, 1),
+           st.floats(0.01, 0.5))
+    def test_step_invariants(seed, b, c, p):
+        plan = cnn_split_table(make_resnet18(101), 224)
+        env = MECEnv(make_env_params(plan, n_ue=3, n_channels=2))
+        s = env.reset(jax.random.PRNGKey(seed))
+        n = env.params.n_ue
+        bb = jnp.full((n,), b, jnp.int32)
+        cc = jnp.full((n,), c, jnp.int32)
+        pp = jnp.full((n,), p)
+        s2, reward, done, info = env.step(s, bb, cc, pp)
+        # tasks never increase (unless auto-reset fired)
+        if not bool(done):
+            assert bool(jnp.all(s2.k <= s.k))
+            assert bool(jnp.all(s2.k >= 0))
+        assert float(info["energy"]) >= 0
+        assert float(info["completed"]) >= 0
+        assert float(reward) <= 0  # reward is negative overhead
+        assert bool(jnp.all(s2.l >= -1e-6))
+        assert bool(jnp.all(s2.n >= 0))
 
 
 def test_local_policy_completes_all_tasks(env):

@@ -3,10 +3,13 @@ initial queues (no task lost or double-counted), for arbitrary policies."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cnn import make_resnet18
-from repro.core.split import cnn_split_table
+from repro.core.split import build_fleet, cnn_split_table
 from repro.env.mecenv import MECEnv, make_env_params
 
 
@@ -36,3 +39,41 @@ def test_completed_tasks_conserved(seed):
 def pytest_approx(x):
     import pytest
     return pytest.approx(x, abs=1.0)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_completed_tasks_conserved_hetero_fleet(seed):
+    """Conservation holds per-UE with MIXED plans (different backbones,
+    devices, and action-space widths, so padded actions exist)."""
+    from repro.configs import get_config
+    from repro.core import overhead as oh
+    from repro.core.split import transformer_split_table
+    cnn = cnn_split_table(make_resnet18(101), 224)
+    cnn_iot = cnn_split_table(make_resnet18(101), 224, dev=oh.IOT_SOC)
+    tf_small = transformer_split_table(get_config("qwen3-1.7b"),
+                                       ue_dev=oh.PHONE_NPU, n_points=2)
+    fleet = build_fleet([cnn, tf_small, cnn_iot],
+                        [oh.JETSON_NANO, oh.PHONE_NPU, oh.IOT_SOC])
+    env = MECEnv(make_env_params(fleet, n_channels=2, lam_tasks=20.0))
+    feas = np.asarray(env.action_mask())
+    valid = [np.where(feas[ue])[0] for ue in range(3)]
+    key = jax.random.PRNGKey(seed)
+    s = env.reset(key)
+    per_ue_initial = np.asarray(s.k).copy()
+    per_ue_completed = np.zeros(3)
+    done = False
+    rng = np.random.RandomState(seed % 2**31)
+    for _ in range(600):
+        k_before = np.asarray(s.k).copy()
+        b = jnp.asarray([rng.choice(v) for v in valid], jnp.int32)
+        c = jnp.asarray(rng.randint(0, env.n_channels, 3), jnp.int32)
+        p = jnp.asarray(rng.uniform(0.05, 0.5, 3), jnp.float32)
+        s, r, done, info = env.step(s, b, c, p)
+        if bool(done):
+            per_ue_completed += k_before  # auto-reset wiped s.k
+            break
+        per_ue_completed += k_before - np.asarray(s.k)
+    assert bool(done), "episode should terminate under any feasible policy"
+    # completed + remaining == spawned, per UE
+    np.testing.assert_allclose(per_ue_completed, per_ue_initial, atol=1.0)

@@ -1,0 +1,155 @@
+"""Heterogeneous-fleet refactor invariants: a homogeneous fleet reproduces
+the seed single-plan env bit-for-bit, padded/infeasible actions are never
+sampled, and the fleet env stays fully jit/vmap-friendly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import overhead as oh
+from repro.core.cnn import make_resnet18
+from repro.core.split import (build_fleet, cnn_split_table,
+                              homogeneous_fleet, transformer_split_table)
+from repro.env.mecenv import MECEnv, make_env_params, per_ue
+from repro.rl import nets
+
+
+@pytest.fixture(scope="module")
+def mixed_fleet():
+    cnn = cnn_split_table(make_resnet18(101), 224)
+    cnn_iot = cnn_split_table(make_resnet18(101), 224, dev=oh.IOT_SOC)
+    # n_points=2 -> 4 actions vs the CNN's 6: exercises padding
+    tf_small = transformer_split_table(get_config("qwen3-1.7b"),
+                                       ue_dev=oh.PHONE_NPU, n_points=2)
+    return build_fleet([cnn, tf_small, cnn_iot],
+                       [oh.JETSON_NANO, oh.PHONE_NPU, oh.IOT_SOC])
+
+
+def test_homogeneous_fleet_matches_seed_env_bit_for_bit():
+    """N identical plans through the fleet path == the seed homogeneous env
+    (single plan broadcast), reward-for-reward and state-for-state."""
+    plan = cnn_split_table(make_resnet18(101), 224)
+    env_a = MECEnv(make_env_params(plan, n_ue=3, n_channels=2))
+    env_b = MECEnv(make_env_params(homogeneous_fleet(plan, 3), n_channels=2))
+    np.testing.assert_array_equal(np.asarray(env_a.params.l_new),
+                                  np.asarray(env_b.params.l_new))
+    sa = env_a.reset(jax.random.PRNGKey(3))
+    sb = env_b.reset(jax.random.PRNGKey(3))
+    rng = np.random.RandomState(0)
+    for _ in range(50):
+        b = jnp.asarray(rng.randint(0, env_a.n_actions_b, 3), jnp.int32)
+        c = jnp.asarray(rng.randint(0, env_a.n_channels, 3), jnp.int32)
+        p = jnp.asarray(rng.uniform(0.05, 0.5, 3), jnp.float32)
+        sa, ra, da, _ = env_a.step(sa, b, c, p)
+        sb, rb, db, _ = env_b.step(sb, b, c, p)
+        assert np.asarray(ra).tobytes() == np.asarray(rb).tobytes()
+        np.testing.assert_array_equal(np.asarray(sa.k), np.asarray(sb.k))
+        np.testing.assert_array_equal(np.asarray(sa.n), np.asarray(sb.n))
+
+
+def test_fleet_padding_layout(mixed_fleet):
+    f = mixed_fleet
+    assert f.n_ue == 3 and f.n_actions == 6
+    # full-local is the LAST action for every UE, raw offload the first
+    assert np.all(f.f_bits[:, -1] == 0.0)
+    assert np.all(f.t_local[:, 0] == 0.0)
+    # the 4-action transformer row has exactly 2 padded (infeasible) slots
+    assert int((~f.feasible[1]).sum()) >= 2
+    assert not f.feasible[1, 3] and not f.feasible[1, 4]
+    # padded slots cost nothing (a step taking them completes no tasks)
+    assert np.all(f.t_local[1, 3:5] == 0.0) and np.all(f.f_bits[1, 3:5] == 0.0)
+    # per-UE device power
+    np.testing.assert_allclose(
+        f.p_compute, [oh.JETSON_NANO.active_power, oh.PHONE_NPU.active_power,
+                      oh.IOT_SOC.active_power])
+
+
+def test_mask_per_ue_and_sampling_respects_it(mixed_fleet):
+    env = MECEnv(make_env_params(mixed_fleet, n_channels=2))
+    mask = env.action_mask()
+    assert mask.shape == (3, env.n_actions_b)
+    actor = nets.init_actor(jax.random.PRNGKey(0), env.obs_dim,
+                            env.n_actions_b, env.n_channels)
+    obs = env.observe(env.reset(jax.random.PRNGKey(1)))
+    for ue in range(3):
+        lb, lc, mu, ls = nets.actor_forward(actor, obs, mask[ue])
+        for seed in range(200):
+            b, _, _ = nets.sample_hybrid(jax.random.PRNGKey(seed), lb, lc,
+                                         mu, ls, mask[ue])
+            assert bool(mask[ue, int(b)]), (ue, int(b))
+        # even from RAW (unmasked) logits, sample_hybrid's mask protects
+        raw = jnp.zeros_like(lb)
+        for seed in range(200):
+            b, _, _ = nets.sample_hybrid(jax.random.PRNGKey(seed), raw, lc,
+                                         mu, ls, mask[ue])
+            assert bool(mask[ue, int(b)]), (ue, int(b))
+
+
+def test_padded_action_is_inert(mixed_fleet):
+    """Forcing a padded action completes nothing and burns no energy for
+    that UE (defense in depth under the mask)."""
+    env = MECEnv(make_env_params(mixed_fleet, n_channels=2))
+    s = env.reset(jax.random.PRNGKey(0), eval_mode=True)
+    b = jnp.asarray([5, 3, 5], jnp.int32)     # ue1 takes a padded slot
+    _, _, _, info = env.step(s, b, jnp.zeros((3,), jnp.int32),
+                             jnp.full((3,), 0.3))
+    l_b = per_ue(env.params.l_new, b)
+    n_b = per_ue(env.params.n_new, b)
+    assert float(l_b[1]) == 0.0 and float(n_b[1]) == 0.0
+
+
+def test_fleet_env_jit_vmap(mixed_fleet):
+    env = MECEnv(make_env_params(mixed_fleet, n_channels=2))
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    states = jax.vmap(env.reset)(keys)
+    b = jnp.zeros((4, 3), jnp.int32)
+    c = jnp.zeros((4, 3), jnp.int32)
+    p = jnp.full((4, 3), 0.3)
+    step = jax.jit(jax.vmap(env.step))
+    _, r, _, _ = step(states, b, c, p)
+    assert r.shape == (4,)
+    assert bool(jnp.all(jnp.isfinite(r)))
+
+
+def test_mahppo_short_training_on_mixed_fleet(mixed_fleet):
+    """One jitted iteration runs end-to-end on a mixed fleet and only
+    feasible actions appear in the collected trajectories."""
+    from repro.rl.mahppo import MAHPPOConfig, make_train_fns, init_agent
+    from repro.optim import adamw_init
+    env = MECEnv(make_env_params(mixed_fleet, n_channels=2))
+    cfg = MAHPPOConfig(iterations=1, horizon=64, n_envs=2, reuse=1,
+                       batch=32)
+    key = jax.random.PRNGKey(0)
+    agent = init_agent(key, env)
+    opt = adamw_init(agent)
+    states = jax.vmap(env.reset)(jax.random.split(key, cfg.n_envs))
+    iteration = make_train_fns(env, cfg)
+    agent, opt, key, states, metrics = iteration(agent, opt, key, states)
+    assert np.isfinite(float(metrics["reward_mean"]))
+
+
+def test_split_plan_invariants_enforced():
+    from repro.core.split import _finalize
+    rows = [(0.0, 0.0, 0.0, 0.0, 100.0, True),
+            (2.0, 0.1, 0.0, 0.0, 50.0, True),
+            (1.0, 0.1, 0.0, 0.0, 25.0, True),   # t_local not monotone
+            (3.0, 0.2, 0.0, 0.0, 0.0, True)]
+    with pytest.raises(ValueError):
+        _finalize("bad", [1, 2], rows)
+    rows_bad_bits = [(0.0, 0.0, 0.0, 0.0, 100.0, True),
+                     (1.0, 0.1, 0.0, 0.0, 50.0, True),
+                     (2.0, 0.2, 0.0, 0.0, 7.0, True)]  # f_bits[-1] != 0
+    with pytest.raises(ValueError):
+        _finalize("bad2", [1], rows_bad_bits)
+
+
+def test_build_fleet_validation():
+    plan = cnn_split_table(make_resnet18(101), 224)
+    with pytest.raises(ValueError):
+        build_fleet([])
+    with pytest.raises(ValueError):
+        build_fleet([plan, plan], [oh.JETSON_NANO])
+    # tables built for one device can't be paired with another's profile
+    with pytest.raises(ValueError, match="jetson-nano"):
+        build_fleet([plan], [oh.IOT_SOC])

@@ -4,23 +4,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# only the property test needs hypothesis; the codec-size and heuristic
+# tests below must still run where it isn't installed
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = None
 
 from repro.core.compressor import quantize
 from repro.core.huffman import coded_size_bits, decode, encode
 from repro.core.jalad import byte_entropy_bits
 
-
-@settings(max_examples=10, deadline=None)
-@given(st.integers(0, 2**31 - 1), st.integers(2, 12))
-def test_huffman_roundtrip(seed, sharpness):
-    x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed),
-                                     (32, 32))) ** sharpness
-    codes, _, _ = quantize(jnp.asarray(x), 8)
-    sym = np.asarray(codes).reshape(-1)
-    stream, table, n = encode(sym)
-    back = decode(stream, table, n)
-    assert (back == sym).all()
+if given is not None:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(2, 12))
+    def test_huffman_roundtrip(seed, sharpness):
+        x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed),
+                                         (32, 32))) ** sharpness
+        codes, _, _ = quantize(jnp.asarray(x), 8)
+        sym = np.asarray(codes).reshape(-1)
+        stream, table, n = encode(sym)
+        back = decode(stream, table, n)
+        assert (back == sym).all()
 
 
 def test_huffman_size_close_to_entropy_estimate():
@@ -58,9 +64,9 @@ def test_oracle_beats_greedy_and_local(env3):
     g = greedy_eval(env3)
     o = oracle_static_eval(env3)
     beta = float(env3.params.beta)
-    local = (float(env3.params.l_new[-1])
-             + beta * float(env3.params.l_new[-1])
-             * float(env3.params.p_compute))
+    local = (float(env3.params.l_new[0, -1])
+             + beta * float(env3.params.l_new[0, -1])
+             * float(env3.params.p_compute[0]))
     assert o["overhead"] <= g["overhead"] + 1e-9
     assert o["overhead"] < local
     # oracle staggers: not all UEs make the same offload decision
