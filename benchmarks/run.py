@@ -145,6 +145,22 @@ def main() -> None:
         _emit("hetero_iter_us", out["iter_us_mixed"],
               f"homogeneous_us={out['iter_us_homogeneous']:.0f}")
 
+    if want("churn"):
+        _section("dynamic fleet (UE churn: join/leave mid-episode)")
+        from benchmarks import bench_churn
+        out = bench_churn.run(quick=quick)
+        results["churn"] = out
+        for r in out["rows"]:
+            _emit(f"churn_{int(100*r['churn'])}pct", 0.0,
+                  f"mahppo={r['mahppo_reward']:.4f};"
+                  f"local={r['local_reward']:.4f};"
+                  f"t_ms={1e3*r['t_task']:.1f};"
+                  f"fleet={r['n_active_mean']:.2f};"
+                  f"beats_local={r['beats_local']}")
+        _emit("churn_iter_us", out["iter_us_churn"],
+              f"static_us={out['iter_us_static']:.0f};"
+              f"ratio={out['iter_ratio']:.2f}")
+
     if want("archs"):
         _section("fig13 other backbones (+ assigned archs)")
         from benchmarks import bench_archs

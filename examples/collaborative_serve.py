@@ -69,9 +69,12 @@ def run_split_forward(params, cfg, tokens, split_layer, ae, bits=8):
     return _logits(params, cfg, x), payload_bits
 
 
-def run_fleet_demo(arch: str, iterations: int):
+def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
+                   leave_rate=0.0):
     """Mixed-fleet scheduling: per-UE split tables + device tiers end-to-end
-    through MAHPPO, vs the non-coordinating greedy heuristic."""
+    through MAHPPO, vs the non-coordinating greedy heuristic. With nonzero
+    churn/leave rates the fleet is DYNAMIC: UEs join from a standby pool and
+    drop mid-episode, and the policy schedules whoever is present."""
     from repro.core.fleets import make_mixed_fleet
     from repro.env.mecenv import MECEnv, make_env_params
     from repro.rl.heuristics import greedy_eval
@@ -85,7 +88,32 @@ def run_fleet_demo(arch: str, iterations: int):
               f"(P_compute={prof.p_compute:.1f} W, "
               f"{feas}/{fleet.n_actions} feasible actions)")
 
-    env = MECEnv(make_env_params(fleet, n_channels=2))
+    env = MECEnv(make_env_params(fleet, n_channels=2,
+                                 churn_rate=churn_rate,
+                                 leave_rate=leave_rate))
+    demo_active = None         # representative membership for the baselines
+    if env.dynamic:
+        print(f"dynamic fleet: join intensity {churn_rate}, "
+              f"leave prob {leave_rate}/frame")
+        # short random rollout to show membership actually churns
+        s = env.reset(jax.random.PRNGKey(7))
+        trace = []
+        demo_active = np.asarray(s.active)
+        for t in range(24):
+            n = env.params.n_ue
+            b = jnp.full((n,), env.n_actions_b - 1, jnp.int32)
+            s, _, done, info = env.step(s, b, jnp.zeros((n,), jnp.int32),
+                                        jnp.full((n,), 0.05))
+            if bool(done):
+                break               # post-done state is the auto-reset fleet
+            trace.append("".join("#" if a else "." for a in
+                                 np.asarray(s.active)))
+            if np.asarray(s.active).any():
+                demo_active = np.asarray(s.active)  # last non-empty snapshot
+        print("  membership (one column per UE, # active / . standby):")
+        for t, row in enumerate(trace):
+            if t % 4 == 0:
+                print(f"    frame {t:2d}: {row}")
     print(f"\ntraining MAHPPO on the mixed fleet ({iterations} iterations)...")
     cfg = MAHPPOConfig(iterations=iterations, horizon=512, n_envs=4, reuse=4)
     agent, hist = train_mahppo(env, cfg, seed=0,
@@ -94,8 +122,15 @@ def run_fleet_demo(arch: str, iterations: int):
                                    f"reward={r['reward_mean']:.4f}")
                                if r["iteration"] % 5 == 0 else None)
     ev = evaluate_policy(env, agent, frames=64)
-    gr = greedy_eval(env)
+    # score greedy on a comparable fleet: the traced membership snapshot,
+    # so both columns describe a churned fleet, not all-N vs active-only
+    gr = greedy_eval(env, active=demo_active)
     beta = float(env.params.beta)
+    if env.dynamic:
+        print(f"\nmean fleet size over eval: {ev['n_active']:.2f} "
+              f"of {env.params.n_ue} UEs"
+              + ("" if demo_active is None else
+                 f"; greedy scored on {int(demo_active.sum())} active UEs"))
     print(f"\nMAHPPO : latency {1e3*ev['t_task']:.1f} ms  "
           f"energy {1e3*ev['e_task']:.1f} mJ  "
           f"overhead {ev['t_task'] + beta*ev['e_task']:.4f}")
@@ -125,11 +160,28 @@ def main():
     ap.add_argument("--fleet", action="store_true",
                     help="schedule a heterogeneous 4-UE fleet instead of "
                          "running the single-UE split forward")
+    ap.add_argument("--churn", action="store_true",
+                    help="make the --fleet scenario dynamic: UEs join/leave "
+                         "mid-episode (implies --fleet; also implied by "
+                         "passing --churn-rate/--leave-rate)")
+    ap.add_argument("--churn-rate", type=float, default=None,
+                    help="Poisson join intensity per standby slot per frame "
+                         "(default 0.2 when churning; implies --churn)")
+    ap.add_argument("--leave-rate", type=float, default=None,
+                    help="per-frame departure probability of an active UE "
+                         "(default 0.1 when churning; implies --churn)")
     ap.add_argument("--iterations", type=int, default=15)
     args = ap.parse_args()
 
-    if args.fleet:
-        run_fleet_demo(args.arch, args.iterations)
+    churn = (args.churn or args.churn_rate is not None
+             or args.leave_rate is not None)
+    if args.fleet or churn:
+        run_fleet_demo(
+            args.arch, args.iterations,
+            churn_rate=(0.2 if args.churn_rate is None
+                        else args.churn_rate) if churn else 0.0,
+            leave_rate=(0.1 if args.leave_rate is None
+                        else args.leave_rate) if churn else 0.0)
         return
 
     cfg = reduced(get_config(args.arch), n_layers=4)

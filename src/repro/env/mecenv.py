@@ -15,6 +15,17 @@ UEs may be heterogeneous: the overhead tables l_new/n_new/feasible are
 (N, B_max+2) — one row per UE, built from a core.split.FleetPlan mixing
 backbones and device tiers — and p_compute is a (N,) vector. A single
 SplitPlan broadcasts to N identical rows, reproducing the seed scenario.
+
+Fleets may also be DYNAMIC: with `churn_rate` > 0 and/or `leave_rate` > 0
+(EnvParams), UEs join from a standby pool (Poisson arrivals per standby
+slot: join prob 1 - exp(-churn_rate) per frame) and depart (geometric
+session length: leave prob `leave_rate` per frame). `EnvState.active` is a
+(N,) bool mask — N stays the static *maximum* fleet size, so every shape
+is fixed and the env stays jit/vmap-clean; membership is data, not
+structure. Inactive UEs contribute no interference, energy, completions,
+or reward; a re-joining UE draws a fresh task queue and distance. With
+both rates at 0.0 the dynamic machinery is compiled out entirely and the
+env is bit-for-bit identical to the static one (same PRNG key stream).
 """
 from __future__ import annotations
 
@@ -43,6 +54,8 @@ class EnvParams(NamedTuple):
     d_high: jnp.ndarray
     n_ue: int
     pathloss: jnp.ndarray
+    churn_rate: jnp.ndarray = 0.0  # Poisson join intensity per standby slot
+    leave_rate: jnp.ndarray = 0.0  # per-frame departure prob (geometric)
 
 
 def per_ue(table: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
@@ -54,10 +67,12 @@ def per_ue(table: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 def make_env_params(plan: Union[SplitPlan, FleetPlan], *, n_ue=5,
                     n_channels=2, t0=0.5, beta=0.47, p_compute=None,
                     omega=1e6, sigma=1e-9, p_max=0.5, lam_tasks=200.0,
-                    d_low=1.0, d_high=100.0, pathloss=3.0) -> EnvParams:
+                    d_low=1.0, d_high=100.0, pathloss=3.0,
+                    churn_rate=0.0, leave_rate=0.0) -> EnvParams:
     """A single SplitPlan is broadcast to n_ue identical UEs (the seed
     homogeneous scenario); a FleetPlan supplies per-UE tables and device
-    power draws (n_ue/p_compute then come from the fleet)."""
+    power draws (n_ue/p_compute then come from the fleet). Nonzero
+    churn_rate/leave_rate make the fleet dynamic (see module docstring)."""
     if isinstance(plan, FleetPlan):
         n_ue = plan.n_ue
         l_new = jnp.asarray(plan.t_local + plan.t_comp, jnp.float32)
@@ -80,7 +95,9 @@ def make_env_params(plan: Union[SplitPlan, FleetPlan], *, n_ue=5,
         sigma=jnp.full((n_channels,), sigma, jnp.float32),
         p_max=jnp.float32(p_max), lam_tasks=jnp.float32(lam_tasks),
         d_low=jnp.float32(d_low), d_high=jnp.float32(d_high),
-        n_ue=n_ue, pathloss=jnp.float32(pathloss))
+        n_ue=n_ue, pathloss=jnp.float32(pathloss),
+        churn_rate=jnp.float32(churn_rate),
+        leave_rate=jnp.float32(leave_rate))
 
 
 class EnvState(NamedTuple):
@@ -90,16 +107,26 @@ class EnvState(NamedTuple):
     d: jnp.ndarray          # (N,) distances
     t: jnp.ndarray          # frame counter
     key: jnp.ndarray
+    active: jnp.ndarray = None  # (N,) bool membership mask (all True static)
 
 
 class MECEnv:
-    """Functional env; all methods are jit/vmap friendly."""
+    """Functional env; all methods are jit/vmap friendly.
+
+    `self.dynamic` is a Python-level flag fixed at construction: when both
+    churn rates are 0.0 every churn branch below is skipped at trace time,
+    so the compiled static env is exactly the pre-churn one (identical
+    computation graph AND identical PRNG key stream).
+    """
 
     def __init__(self, params: EnvParams):
         self.params = params
         self.n_actions_b = int(params.l_new.shape[1])
         self.n_channels = int(params.omega.shape[0])
-        self.obs_dim = 4 * params.n_ue
+        self.dynamic = bool(float(params.churn_rate) > 0.0
+                            or float(params.leave_rate) > 0.0)
+        # dynamic fleets append an activity flag + fleet-size feature per UE
+        self.obs_dim = (6 if self.dynamic else 4) * params.n_ue
 
     def reset(self, key, *, eval_mode=False) -> EnvState:
         p = self.params
@@ -112,18 +139,32 @@ class MECEnv:
             d = jax.random.uniform(kd, (p.n_ue,), minval=p.d_low,
                                    maxval=p.d_high)
         return EnvState(k=k, l=jnp.zeros((p.n_ue,)), n=jnp.zeros((p.n_ue,)),
-                        d=d, t=jnp.zeros((), jnp.int32), key=kn)
+                        d=d, t=jnp.zeros((), jnp.int32), key=kn,
+                        active=jnp.ones((p.n_ue,), bool))
 
     def observe(self, s: EnvState):
         p = self.params
-        return jnp.concatenate([s.k / jnp.maximum(p.lam_tasks, 1.0),
-                                s.l / p.t0,
-                                s.n / 1e6,
-                                s.d / 100.0])
+        base = [s.k / jnp.maximum(p.lam_tasks, 1.0),
+                s.l / p.t0,
+                s.n / 1e6,
+                s.d / 100.0]
+        if self.dynamic:
+            act = s.active.astype(jnp.float32)
+            frac = jnp.broadcast_to(act.sum() / p.n_ue, (p.n_ue,))
+            base += [act, frac]
+        return jnp.concatenate(base)
 
-    def action_mask(self):
-        """(N, B_max+2) per-UE feasibility; padded fleet actions are False."""
-        return self.params.feasible
+    def action_mask(self, s: EnvState = None):
+        """(N, B_max+2) per-UE feasibility; padded fleet actions are False.
+        Given a state in a dynamic env, inactive UEs are further restricted
+        to the always-feasible full-local action (the last one) so dead
+        actors make one deterministic no-op choice instead of wandering the
+        action space."""
+        feas = self.params.feasible
+        if s is None or not self.dynamic:
+            return feas
+        local_only = jnp.zeros_like(feas).at[:, -1].set(True)
+        return jnp.where(s.active[:, None], feas, local_only)
 
     def step(self, s: EnvState, b, c, p_tx):
         """b, c: (N,) int32; p_tx: (N,) float in (0, p_max].
@@ -131,7 +172,11 @@ class MECEnv:
         prm = self.params
         p_tx = jnp.clip(p_tx, 1e-4, prm.p_max)
         g = channel_gain(s.d, prm.pathloss)
-        has_work = s.k > 0
+        act = s.active
+        # inactive UEs do no work: no compute, no tx, no interference. With
+        # act all-True (static env) the & is an exact identity, so the
+        # static computation is bit-for-bit the pre-churn one.
+        has_work = (s.k > 0) & act
         l_new = per_ue(prm.l_new, b)
         n_new = per_ue(prm.n_new, b)
         # a UE contributes interference if it offloads anything this frame
@@ -161,7 +206,7 @@ class MECEnv:
 
         # ---- phase 2: whole new tasks at the new split b
         t_task = l_new + n_new / r
-        can = (k1 > 0) & (t_task > 0)
+        can = (k1 > 0) & (t_task > 0) & act
         m = jnp.where(can, jnp.floor(t_rem / jnp.maximum(t_task, 1e-9)), 0.0)
         m = jnp.minimum(m, k1)
         completed += m
@@ -170,7 +215,7 @@ class MECEnv:
         energy += m * (l_new * prm.p_compute + (n_new / r) * p_tx)
 
         # ---- phase 3: start one partial task
-        start = (k2 > 0) & (t_rem > 0)
+        start = (k2 > 0) & (t_rem > 0) & act
         dt_l2 = jnp.minimum(l_new, t_rem) * start
         t_rem2 = t_rem - dt_l2
         energy += dt_l2 * prm.p_compute
@@ -189,18 +234,47 @@ class MECEnv:
         e_t = energy.sum()
         reward = -prm.t0 / jnp.maximum(k_t, 1.0) \
             - prm.beta * e_t / jnp.maximum(k_t, 1.0)
+
+        # ---- churn: departures drop their remaining queue, arrivals draw a
+        # fresh one (skipped entirely — including the extra key splits — in
+        # the static env, preserving its PRNG stream bit-for-bit)
+        spawned = jnp.float32(0.0)
+        dropped = jnp.float32(0.0)
+        d_next = s.d
+        act_next = act
+        if self.dynamic:
+            key_next, key_reset, kj, kl, kf, kd = jax.random.split(s.key, 6)
+            p_join = 1.0 - jnp.exp(-prm.churn_rate)
+            joins = ~act & (jax.random.uniform(kj, act.shape) < p_join)
+            leaves = act & (jax.random.uniform(kl, act.shape) < prm.leave_rate)
+            k_fresh = jax.random.poisson(kf, prm.lam_tasks,
+                                         act.shape).astype(jnp.float32)
+            d_fresh = jax.random.uniform(kd, act.shape, minval=prm.d_low,
+                                         maxval=prm.d_high)
+            dropped = (k3 * leaves).sum()
+            spawned = (k_fresh * joins).sum()
+            k3 = jnp.where(leaves, 0.0, jnp.where(joins, k_fresh, k3))
+            l2 = jnp.where(leaves | joins, 0.0, l2)
+            n2 = jnp.where(leaves | joins, 0.0, n2)
+            d_next = jnp.where(joins, d_fresh, s.d)
+            act_next = (act & ~leaves) | joins
+        else:
+            key_next, key_reset = jax.random.split(s.key)
+
         done = jnp.all(k3 <= 0)
 
-        # auto-reset on termination
-        key_next, key_reset = jax.random.split(s.key)
+        # auto-reset on termination (full fleet active again)
         fresh = self.reset(key_reset)
         nxt = EnvState(
             k=jnp.where(done, fresh.k, k3),
             l=jnp.where(done, fresh.l, l2),
             n=jnp.where(done, fresh.n, n2),
-            d=jnp.where(done, fresh.d, s.d),
+            d=jnp.where(done, fresh.d, d_next),
             t=jnp.where(done, 0, s.t + 1),
-            key=key_next)
+            key=key_next,
+            active=jnp.where(done, fresh.active, act_next))
         info = {"completed": k_t, "energy": e_t,
-                "rate_mean": r.mean(), "offloads": offloads.sum()}
+                "rate_mean": r.mean(), "offloads": offloads.sum(),
+                "n_active": act.sum(), "spawned": spawned,
+                "dropped": dropped}
         return nxt, reward, done, info

@@ -10,7 +10,8 @@ from repro.env.mecenv import MECEnv, per_ue
 
 def local_policy_eval(env: MECEnv, *, frames=64, seed=0):
     """Always run fully locally (b = B+1; the last action for every UE in a
-    fleet by FleetPlan construction)."""
+    fleet by FleetPlan construction). On dynamic fleets the per-task means
+    cover ACTIVE UEs only (standby slots compute nothing)."""
     b_local = env.n_actions_b - 1
 
     @jax.jit
@@ -23,10 +24,13 @@ def local_policy_eval(env: MECEnv, *, frames=64, seed=0):
             c = jnp.zeros((n,), jnp.int32)
             p = jnp.full((n,), 0.01)
             s2, reward, done, info = env.step(s, b, c, p)
+            act = s.active.astype(jnp.float32)
+            n_act = jnp.maximum(act.sum(), 1.0)
             t_task = per_ue(env.params.l_new, b)
             e_task = t_task * env.params.p_compute
-            return s2, {"reward": reward, "t_task": t_task.mean(),
-                        "e_task": e_task.mean(),
+            return s2, {"reward": reward,
+                        "t_task": (t_task * act).sum() / n_act,
+                        "e_task": (e_task * act).sum() / n_act,
                         "completed": info["completed"]}
 
         _, out = jax.lax.scan(body, s, None, length=frames)
@@ -38,9 +42,8 @@ def local_policy_eval(env: MECEnv, *, frames=64, seed=0):
 
 def random_policy_eval(env: MECEnv, *, frames=64, seed=0):
     """Uniform over each UE's OWN feasible actions (padded/infeasible
-    entries carry -inf logits and are never drawn)."""
-    mask = jnp.asarray(env.action_mask())            # (N, B+2)
-    rand_logits = jnp.where(mask, 0.0, -jnp.inf)
+    entries carry -inf logits and are never drawn). On dynamic fleets the
+    state-dependent mask pins inactive UEs to the inert full-local action."""
 
     @jax.jit
     def rollout(key):
@@ -48,6 +51,7 @@ def random_policy_eval(env: MECEnv, *, frames=64, seed=0):
 
         def body(s, sub):
             n = env.params.n_ue
+            rand_logits = jnp.where(env.action_mask(s), 0.0, -jnp.inf)
             kb, kc, kp = jax.random.split(sub, 3)
             b = jax.vmap(jax.random.categorical)(
                 jax.random.split(kb, n), rand_logits).astype(jnp.int32)

@@ -22,13 +22,16 @@ from repro.env.channel import channel_gain, uplink_rates
 from repro.env.mecenv import MECEnv, per_ue
 
 
-def _joint_overhead(env: MECEnv, b, c, p, d):
-    """Expected per-task latency/energy for each UE under joint actions."""
+def _joint_overhead(env: MECEnv, b, c, p, d, active=None):
+    """Expected per-task latency/energy for each UE under joint actions.
+    `active` (N,) bool: inactive UEs neither transmit nor interfere."""
     prm = env.params
     g = channel_gain(jnp.asarray(d), prm.pathloss)
     l_b = per_ue(prm.l_new, jnp.asarray(b))
     n_b = per_ue(prm.n_new, jnp.asarray(b))
     offl = n_b > 0
+    if active is not None:
+        offl = offl & jnp.asarray(active)
     r = jnp.maximum(uplink_rates(jnp.asarray(p), jnp.asarray(c), g, offl,
                                  omega=prm.omega, sigma=prm.sigma), 1.0)
     t = l_b + n_b / r
@@ -36,11 +39,16 @@ def _joint_overhead(env: MECEnv, b, c, p, d):
     return np.asarray(t), np.asarray(e)
 
 
-def greedy_eval(env: MECEnv, *, d=50.0):
-    """Interference-oblivious greedy (then evaluated WITH interference)."""
+def greedy_eval(env: MECEnv, *, d=50.0, active=None):
+    """Interference-oblivious greedy (then evaluated WITH interference).
+    `active` (N,) bool restricts the report to a dynamic fleet's current
+    members; standby UEs are excluded from the means and don't interfere."""
     prm = env.params
     n = prm.n_ue
     beta = float(prm.beta)
+    act = np.ones((n,), bool) if active is None else np.asarray(active)
+    if not act.any():
+        raise ValueError("active mask selects no UE: nothing to score")
     feas = np.asarray(prm.feasible)                 # (N, B+2)
     # clean-channel rate of a lone UE at p_max on channel 0: one value
     # covers every (ue, b) cell, so score the whole table in one shot
@@ -57,31 +65,44 @@ def greedy_eval(env: MECEnv, *, d=50.0):
     b = [int(x) for x in np.argmin(cost, axis=1)]
     c = [i % env.n_channels for i in range(n)]
     p = [float(prm.p_max)] * n
-    t, e = _joint_overhead(env, b, c, p, [d] * n)
-    return {"b": b, "t_task": float(t.mean()), "e_task": float(e.mean()),
-            "overhead": float((t + beta * e).mean())}
+    t, e = _joint_overhead(env, b, c, p, [d] * n, active=act)
+    return {"b": b, "t_task": float(t[act].mean()),
+            "e_task": float(e[act].mean()),
+            "overhead": float((t + beta * e)[act].mean())}
 
 
-def oracle_static_eval(env: MECEnv, *, d=50.0, max_joint=300_000):
-    """Exhaustive joint search over (b, c) per UE at p_max (small N only)."""
+def oracle_static_eval(env: MECEnv, *, d=50.0, max_joint=300_000,
+                       active=None):
+    """Exhaustive joint search over (b, c) per UE at p_max (small N only).
+    With `active`, standby UEs are pinned to full-local (inert) and only
+    active UEs are searched and scored."""
     prm = env.params
     n = prm.n_ue
     beta = float(prm.beta)
+    act = np.ones((n,), bool) if active is None else np.asarray(active)
+    if not act.any():
+        raise ValueError("active mask selects no UE: nothing to score")
     feas_np = np.asarray(prm.feasible)
-    per_ue_feas = [list(np.where(feas_np[ue])[0]) for ue in range(n)]
+    b_local = env.n_actions_b - 1
+    per_ue_feas = [list(np.where(feas_np[ue])[0]) if act[ue] else [b_local]
+                   for ue in range(n)]
     n_c = env.n_channels
-    spaces = [len(f) * n_c for f in per_ue_feas]
+    # inactive UEs don't transmit, so their channel choice is irrelevant:
+    # one combo per standby slot, not n_c
+    spaces = [len(f) * (n_c if act[ue] else 1)
+              for ue, f in enumerate(per_ue_feas)]
     total = math.prod(spaces)                # exact Python int, no overflow
     if total > max_joint:
         raise ValueError(f"joint space too large: {spaces}")
     best = None
     for combo in itertools.product(*(range(sp) for sp in spaces)):
-        b = [per_ue_feas[ue][x // n_c] for ue, x in enumerate(combo)]
-        c = [x % n_c for x in combo]
+        b = [per_ue_feas[ue][x // n_c if act[ue] else 0]
+             for ue, x in enumerate(combo)]
+        c = [x % n_c if act[ue] else 0 for ue, x in enumerate(combo)]
         p = [float(prm.p_max)] * n
-        t, e = _joint_overhead(env, b, c, p, [d] * n)
-        cost = float((t + beta * e).mean())
+        t, e = _joint_overhead(env, b, c, p, [d] * n, active=act)
+        cost = float((t + beta * e)[act].mean())
         if best is None or cost < best["overhead"]:
-            best = {"b": b, "c": c, "t_task": float(t.mean()),
-                    "e_task": float(e.mean()), "overhead": cost}
+            best = {"b": b, "c": c, "t_task": float(t[act].mean()),
+                    "e_task": float(e[act].mean()), "overhead": cost}
     return best

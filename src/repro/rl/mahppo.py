@@ -52,10 +52,11 @@ def _policy_all(actors, obs, mask):
     return jax.vmap(lambda a, m: nets.actor_forward(a, obs, m))(actors, mask)
 
 
-def _sample_all(keys, lb, lc, mu, ls, mask):
-    """keys/heads: (E, N, ...); mask: (N, n_b) shared across envs."""
+def _sample_all(keys, lb, lc, mu, ls, mask, mask_axis=None):
+    """keys/heads: (E, N, ...); mask: (N, n_b) shared across envs, or
+    (E, N, n_b) per-env when mask_axis=0 (dynamic fleets)."""
     per_env = jax.vmap(nets.sample_hybrid)          # over UEs, mask (N, n_b)
-    return jax.vmap(per_env, in_axes=(0, 0, 0, 0, 0, None))(
+    return jax.vmap(per_env, in_axes=(0, 0, 0, 0, 0, mask_axis))(
         keys, lb, lc, mu, ls, mask)
 
 
@@ -67,17 +68,28 @@ def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
     def sample_step(agent, key, states):
         """states: batched EnvState over E envs."""
         obs = jax.vmap(env.observe)(states)                       # (E, D)
-        lb, lc, mu, ls = jax.vmap(
-            lambda o: _policy_all(agent["actors"], o, mask))(obs)  # (E,N,..)
+        active = states.active.astype(jnp.float32)                # (E, N)
+        if env.dynamic:
+            # state-dependent mask: inactive actors are pinned to full-local
+            masks = jax.vmap(env.action_mask)(states)             # (E,N,n_b)
+            lb, lc, mu, ls = jax.vmap(
+                lambda o, m: _policy_all(agent["actors"], o, m))(obs, masks)
+        else:
+            masks = mask
+            lb, lc, mu, ls = jax.vmap(
+                lambda o: _policy_all(agent["actors"], o, mask))(obs)
         keys = jax.random.split(key, obs.shape[0] * n_ue).reshape(
             obs.shape[0], n_ue, 2)
-        b, c, u = _sample_all(keys, lb, lc, mu, ls, mask)
-        logp = jax.vmap(jax.vmap(nets.log_prob_hybrid))(lb, lc, mu, ls, b, c, u)
+        b, c, u = _sample_all(keys, lb, lc, mu, ls, masks,
+                              mask_axis=0 if env.dynamic else None)
+        logp = jax.vmap(jax.vmap(nets.log_prob_hybrid))(
+            lb, lc, mu, ls, b, c, u, active)
         value = jax.vmap(lambda o: nets.critic_forward(agent["critic"], o))(obs)
         p_tx = nets.exec_power(u, p_max)
         nstates, reward, done, info = jax.vmap(env.step)(states, b, c, p_tx)
         tr = {"obs": obs, "b": b, "c": c, "u": u, "logp": logp,
               "reward": reward, "done": done, "value": value,
+              "active": active,
               "completed": info["completed"], "energy": info["energy"]}
         return nstates, tr
 
@@ -99,16 +111,22 @@ def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
     def loss_fn(agent, batch):
         obs, b, c, u = batch["obs"], batch["b"], batch["c"], batch["u"]
         adv, ret, logp_old = batch["adv"], batch["ret"], batch["logp"]
+        act = batch["active"]                                     # (B, N)
         lb, lc, mu, ls = jax.vmap(
             lambda o: _policy_all(agent["actors"], o, mask))(obs)
-        logp = jax.vmap(jax.vmap(nets.log_prob_hybrid))(lb, lc, mu, ls, b, c, u)
+        logp = jax.vmap(jax.vmap(nets.log_prob_hybrid))(
+            lb, lc, mu, ls, b, c, u, act)
         ratio = jnp.exp(logp - logp_old)                          # (B, N)
         a = adv[:, None]
         surr = jnp.minimum(ratio * a,
                            jnp.clip(ratio, 1 - cfg.clip, 1 + cfg.clip) * a)
-        ent = jax.vmap(jax.vmap(nets.entropy_hybrid))(lb, lc, ls)
-        actor_loss = -(surr.mean(axis=0).sum()
-                       + cfg.ent_coef * ent.mean(axis=0).sum())
+        ent = jax.vmap(jax.vmap(nets.entropy_hybrid))(lb, lc, ls, act)
+        # per-actor mean over the samples where that actor was ACTIVE: dead
+        # agents contribute neither surrogate nor entropy, and a mostly-
+        # inactive actor's few live samples aren't diluted by its dead ones
+        n_act = jnp.maximum(act.sum(axis=0), 1.0)                 # (N,)
+        actor_loss = -(((surr * act).sum(axis=0) / n_act).sum()
+                       + cfg.ent_coef * ((ent * act).sum(axis=0) / n_act).sum())
         v = jax.vmap(lambda o: nets.critic_forward(agent["critic"], o))(obs)
         critic_loss = jnp.mean((v - ret) ** 2)
         total = actor_loss + critic_loss
@@ -125,15 +143,19 @@ def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
             "b": traj["b"].reshape(M, n_ue), "c": traj["c"].reshape(M, n_ue),
             "u": traj["u"].reshape(M, n_ue),
             "logp": traj["logp"].reshape(M, n_ue),
+            "active": traj["active"].reshape(M, n_ue),
             "adv": adv.reshape(M), "ret": ret.reshape(M)}
         if cfg.norm_adv:
             a = flat["adv"]
             flat["adv"] = (a - a.mean()) / (a.std() + 1e-8)
-        n_updates = cfg.reuse * max(M // cfg.batch, 1)
+        # replace=False draws can't exceed the population: tiny horizons
+        # (M < cfg.batch) clamp the minibatch instead of crashing
+        bsz = min(cfg.batch, M)
+        n_updates = cfg.reuse * max(M // bsz, 1)
 
         def epoch_body(carry, sub):
             agent, opt = carry
-            idx = jax.random.choice(sub, M, (cfg.batch,), replace=False)
+            idx = jax.random.choice(sub, M, (bsz,), replace=False)
             mb = jax.tree_util.tree_map(lambda x: x[idx], flat)
             (_, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(agent, mb)
@@ -184,8 +206,9 @@ def train_mahppo(env: MECEnv, cfg: MAHPPOConfig, seed=0,
 def evaluate_policy(env: MECEnv, agent, *, frames=64, seed=0,
                     deterministic=True):
     """Run eval-mode episodes; report per-task latency/energy (Eq. 7/8
-    realized under the learned policy) plus cumulative reward."""
-    mask = env.action_mask()
+    realized under the learned policy) plus cumulative reward. On dynamic
+    fleets the per-task overhead is aggregated over ACTIVE UEs only —
+    standby slots neither transmit nor weigh into t_task/e_task."""
     p_max = env.params.p_max
     n_ue = env.params.n_ue
 
@@ -196,6 +219,7 @@ def evaluate_policy(env: MECEnv, agent, *, frames=64, seed=0,
         def body(carry, sub):
             s = carry
             obs = env.observe(s)
+            mask = env.action_mask(s)        # state-dependent when dynamic
             lb, lc, mu, ls = _policy_all(agent["actors"], obs, mask)
             if deterministic:
                 b = jnp.argmax(jnp.where(mask, lb, -jnp.inf), -1)
@@ -212,7 +236,7 @@ def evaluate_policy(env: MECEnv, agent, *, frames=64, seed=0,
             g = channel_gain(s.d, env.params.pathloss)
             l_b = per_ue(env.params.l_new, b)
             n_b = per_ue(env.params.n_new, b)
-            offl = n_b > 0
+            offl = (n_b > 0) & s.active
             r = jnp.maximum(uplink_rates(p_tx, c, g, offl,
                                          omega=env.params.omega,
                                          sigma=env.params.sigma), 1.0)
@@ -220,11 +244,13 @@ def evaluate_policy(env: MECEnv, agent, *, frames=64, seed=0,
             e_task = l_b * env.params.p_compute + (n_b / r) * p_tx
             # completion-weighted per-task overhead: a UE finishing 18 fast
             # offloaded tasks counts 18x, one slow local task counts once.
-            w = jnp.where(t_task > 0, env.params.t0 / t_task, 0.0) * (s.k > 0)
+            # Inactive UEs carry zero weight.
+            w = jnp.where(t_task > 0, env.params.t0 / t_task, 0.0) \
+                * (s.k > 0) * s.active
             return s2, {"reward": reward,
                         "t_sum": (t_task * w).sum(), "e_sum": (e_task * w).sum(),
                         "w_sum": w.sum(), "completed": info["completed"],
-                        "done": done}
+                        "n_active": info["n_active"], "done": done}
 
         _, out = jax.lax.scan(body, s, jax.random.split(key, frames))
         return out

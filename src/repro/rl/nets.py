@@ -78,23 +78,34 @@ def sample_hybrid(key, logits_b, logits_c, mu, log_std, mask=None):
     return b, c, u
 
 
-def log_prob_hybrid(logits_b, logits_c, mu, log_std, b, c, u):
+def log_prob_hybrid(logits_b, logits_c, mu, log_std, b, c, u, active=None):
+    """active: optional () / broadcastable activity weight for dynamic
+    fleets — an inactive actor contributes exactly zero log-prob, so its
+    (ignored-by-the-env) action can't steer the policy gradient."""
     lb = jax.nn.log_softmax(logits_b)[..., b] if logits_b.ndim == 1 else \
         jnp.take_along_axis(jax.nn.log_softmax(logits_b), b[..., None], -1)[..., 0]
     lc = jax.nn.log_softmax(logits_c)[..., c] if logits_c.ndim == 1 else \
         jnp.take_along_axis(jax.nn.log_softmax(logits_c), c[..., None], -1)[..., 0]
     var = jnp.exp(2 * log_std)
     lp = -0.5 * ((u - mu) ** 2 / var + 2 * log_std + jnp.log(2 * jnp.pi))
-    return lb + lc + lp
+    out = lb + lc + lp
+    if active is not None:
+        out = out * active
+    return out
 
 
-def entropy_hybrid(logits_b, logits_c, log_std):
+def entropy_hybrid(logits_b, logits_c, log_std, active=None):
+    """active: optional activity weight — inactive actors contribute zero
+    entropy (no bonus for dithering while off-fleet)."""
     pb = jax.nn.softmax(logits_b)
     pc = jax.nn.softmax(logits_c)
     hb = -jnp.sum(pb * jnp.log(pb + 1e-12), axis=-1)
     hc = -jnp.sum(pc * jnp.log(pc + 1e-12), axis=-1)
     hp = 0.5 * jnp.log(2 * jnp.pi * jnp.e) + log_std
-    return hb + hc + hp
+    out = hb + hc + hp
+    if active is not None:
+        out = out * active
+    return out
 
 
 def exec_power(u, p_max):

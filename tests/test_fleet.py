@@ -129,6 +129,76 @@ def test_mahppo_short_training_on_mixed_fleet(mixed_fleet):
     assert np.isfinite(float(metrics["reward_mean"]))
 
 
+# Golden trajectories captured from the PRE-churn static env (PR 1 HEAD):
+# 40 frames of rewards + the final EnvState under a fixed seed/action
+# stream. Guards that (a) the static env itself and (b) the dynamic env
+# with churn_rate=leave_rate=0.0 are BIT-FOR-BIT the seed behavior —
+# including the PRNG key stream (key_hex below).
+_GOLD = {
+    "homo": {
+        "rewards": "ed7b13beb7b8a4bd81b3eebd05e6a8bd5b8019bd48cb09be9ec33a"
+                   "bdd3e590bd58ebd3bdb580c2bddea8cebdc29f48bd47c183bd5271"
+                   "d2bd28dba6bd52c4c9bd5a1286bd1cbdafbd7fa641bd01fea9bdd8"
+                   "4a4ebd07bdb3bd6087a5bd68e70cbeec2816be4697b3bd3f0570bd"
+                   "a9339cbe525f68bd74a807be7ec88abdd2980dbe28f0c2bd7ce10c"
+                   "be7f91fdbdee0fd1bdda1fd9bd284bfdbd2ad8d8bd5a42f7bd",
+        "k": "000040400000000000000000", "l": "def94e3d0000000000000000",
+        "n": "000044470000000000000000",
+    },
+    "mixed": {
+        "rewards": "ecec87be79c742bfd09e39bf9c0d1ebe4babb4bf800261bff286c7"
+                   "bda075d3bd93d91abcf52307bc070817be937336be5c99a9bd4a92"
+                   "8ebe2a44c8be93550fbe0e7725bee8a309be4f9c01be643b17be8e"
+                   "c648be26d344bd861a84be262245bfa438b5bd503c33be5f51a2bd"
+                   "1cfb78bdd43191bec5ceadbebc4beebda4603ebec52030bffb01db"
+                   "bd083a2cbf1a2e2fbf10c529bff7e12fbfc52030bfbc942fbf",
+        "k": "000000000000000000001643", "l": "0000000000000000d07d853d",
+        "n": "00000000000000000000c447",
+    },
+}
+_GOLD_D = "54d26642cad9e3416aabea41"
+_GOLD_KEY = "04aeb16524c70b97"
+
+
+def _golden_rollout(env, n_ue=3, seed=3, steps=40):
+    s = env.reset(jax.random.PRNGKey(seed))
+    rng = np.random.RandomState(0)
+    feas = np.asarray(env.params.feasible)
+    valid = [np.where(feas[ue])[0] for ue in range(n_ue)]
+    rewards = []
+    for _ in range(steps):
+        b = jnp.asarray([rng.choice(v) for v in valid], jnp.int32)
+        c = jnp.asarray(rng.randint(0, env.n_channels, n_ue), jnp.int32)
+        p = jnp.asarray(rng.uniform(0.05, 0.5, n_ue), jnp.float32)
+        s, r, d, _ = env.step(s, b, c, p)
+        rewards.append(np.float32(r))
+    return np.asarray(rewards, np.float32), s
+
+
+@pytest.mark.parametrize("churn_kwargs", [
+    {},                                         # the static entry point
+    {"churn_rate": 0.0, "leave_rate": 0.0},     # zero-churn dynamic request
+], ids=["static", "zero_churn"])
+def test_env_matches_prechurn_golden(mixed_fleet, churn_kwargs):
+    plan = cnn_split_table(make_resnet18(101), 224)
+    for name, env in [
+            ("homo", MECEnv(make_env_params(plan, n_ue=3, n_channels=2,
+                                            **churn_kwargs))),
+            ("mixed", MECEnv(make_env_params(mixed_fleet, n_channels=2,
+                                             **churn_kwargs)))]:
+        assert not env.dynamic          # both rates 0.0 => static machinery
+        assert env.obs_dim == 4 * env.params.n_ue
+        rewards, s = _golden_rollout(env)
+        g = _GOLD[name]
+        assert rewards.tobytes().hex() == g["rewards"], name
+        for field in ("k", "l", "n"):
+            got = np.asarray(getattr(s, field), np.float32).tobytes().hex()
+            assert got == g[field], (name, field)
+        assert np.asarray(s.d, np.float32).tobytes().hex() == _GOLD_D
+        assert np.asarray(s.key, np.uint32).tobytes().hex() == _GOLD_KEY
+        assert bool(s.active.all())
+
+
 def test_split_plan_invariants_enforced():
     from repro.core.split import _finalize
     rows = [(0.0, 0.0, 0.0, 0.0, 100.0, True),

@@ -62,6 +62,66 @@ def test_exec_power_in_range():
     assert bool(jnp.all(p > 0)) and bool(jnp.all(p <= 0.5))
 
 
+def test_update_clamps_batch_to_population():
+    """M < cfg.batch must clamp the minibatch instead of letting
+    jax.random.choice(..., replace=False) over-draw the population."""
+    from repro.optim import adamw_init
+    from repro.rl.mahppo import MAHPPOConfig, init_agent, make_train_fns
+    plan = cnn_split_table(make_resnet18(101), 224)
+    env = MECEnv(make_env_params(plan, n_ue=2, n_channels=2))
+    cfg = MAHPPOConfig(iterations=1, horizon=16, n_envs=2, reuse=2,
+                       batch=256)               # M = 16 << batch
+    key = jax.random.PRNGKey(0)
+    agent = init_agent(key, env)
+    opt = adamw_init(agent)
+    states = jax.vmap(env.reset)(jax.random.split(key, cfg.n_envs))
+    iteration = make_train_fns(env, cfg)
+    agent, opt, key, states, metrics = iteration(agent, opt, key, states)
+    assert np.isfinite(float(metrics["reward_mean"]))
+    assert np.isfinite(float(metrics["actor_loss"]))
+
+
+def test_evaluate_policy_completion_weighted_math():
+    """evaluate_policy's completion-weighted t_task/e_task against a
+    hand-computed single-UE scenario: an obs-independent actor (all weights
+    zero, biases pin the action) makes every frame identical, so the
+    weighted means must equal the per-task overhead of that one action."""
+    from repro.env.channel import channel_gain, uplink_rates
+    from repro.rl.mahppo import evaluate_policy
+    plan = cnn_split_table(make_resnet18(101), 224)
+    env = MECEnv(make_env_params(plan, n_ue=1, n_channels=2,
+                                 lam_tasks=500.0))   # queue never drains
+    b_star, c_star, u_star = 1, 0, 0.7
+    actor = nets.init_actor(jax.random.PRNGKey(0), env.obs_dim,
+                            env.n_actions_b, env.n_channels)
+    actor = jax.tree_util.tree_map(jnp.zeros_like, actor)
+    # zeroed trunk => h = 0 => heads output exactly their final bias
+    actor["head_b"][-1]["b"] = jnp.zeros(
+        (env.n_actions_b,)).at[b_star].set(5.0)
+    actor["head_c"][-1]["b"] = jnp.zeros((env.n_channels,)).at[c_star].set(5.0)
+    actor["head_p"][-1]["b"] = jnp.array([u_star, -1.0])
+    agent = {"actors": jax.tree_util.tree_map(lambda x: x[None], actor)}
+
+    res = evaluate_policy(env, agent, frames=4)
+
+    # hand-computed Eq. 7/8 overhead of (b*, c*, sigmoid(u*) p_max) at the
+    # eval-mode distance d=50 with no interference (single UE)
+    p_tx = float(jax.nn.sigmoid(u_star) * env.params.p_max)
+    g = channel_gain(jnp.array([50.0]), env.params.pathloss)
+    r = float(jnp.maximum(uplink_rates(
+        jnp.array([p_tx]), jnp.array([c_star]), g, jnp.array([True]),
+        omega=env.params.omega, sigma=env.params.sigma)[0], 1.0))
+    l_b = float(env.params.l_new[0, b_star])
+    n_b = float(env.params.n_new[0, b_star])
+    t_expect = l_b + n_b / r
+    e_expect = l_b * float(env.params.p_compute[0]) + (n_b / r) * p_tx
+    assert res["t_task"] == pytest.approx(t_expect, rel=1e-5)
+    assert res["e_task"] == pytest.approx(e_expect, rel=1e-5)
+    # each frame completes floor(t0/t_task) whole tasks plus the carry-over
+    assert res["completed"] == pytest.approx(
+        float(env.params.t0) / t_expect, abs=1.0)
+
+
 @pytest.mark.slow
 def test_mahppo_improves_reward():
     from repro.rl.mahppo import MAHPPOConfig, train_mahppo
