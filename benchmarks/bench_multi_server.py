@@ -1,0 +1,104 @@
+"""Multi-server edge benchmark: MAHPPO learning to load-balance a 2-server
+pool (TPU-v5e near the cell center + a farther edge-GPU tier) against the
+fixed-routing references:
+
+* nearest-server greedy — every UE routes to the closest server; the whole
+  fleet shares its two channels and pays the interference
+* load-aware round-robin — balanced UE counts, interference-oblivious
+* route-aware greedy — per-UE best (split, server) under a clean channel
+  (collapses to nearest-server here: the near v5e dominates every
+  independent comparison, which is exactly the trap)
+* all-local
+
+Also times the jitted MAHPPO iteration on the pool env vs the
+single-server env of the same fleet: the route head adds one categorical
+branch and a (N,)-gather — the guard keeps it within `PARITY_LIMIT`x.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.cnn import make_resnet18
+from repro.core.fleets import make_edge_pool
+from repro.core.split import cnn_split_table
+from repro.env.mecenv import MECEnv, make_env_params
+from repro.rl.baselines import (load_aware_eval, local_policy_eval,
+                                nearest_server_eval)
+from repro.rl.heuristics import greedy_eval
+from repro.rl.mahppo import MAHPPOConfig, evaluate_policy, train_mahppo
+
+PARITY_LIMIT = 1.2
+# wall-clock ratios from a handful of timed iterations are noisy on
+# shared CI runners; the smoke gate only guards gross regressions
+PARITY_LIMIT_SMOKE = 1.5
+N_UE = 4
+
+
+def make_pool_env(n_servers: int = 2, n_ue: int = N_UE) -> MECEnv:
+    plan = cnn_split_table(make_resnet18(101), 224)
+    pool = make_edge_pool(n_servers) if n_servers > 1 else None
+    return MECEnv(make_env_params(plan, n_ue=n_ue, n_channels=2, pool=pool))
+
+
+def run(quick=True, smoke=False):
+    iters = 3 if smoke else (30 if quick else 100)
+    env = make_pool_env(2)
+    beta = float(env.params.beta)
+
+    t0 = time.time()
+    cfg = MAHPPOConfig(iterations=iters, horizon=512, n_envs=4, reuse=4)
+    agent, hist = train_mahppo(env, cfg, seed=0)
+    train_s = time.time() - t0
+
+    ev = evaluate_policy(env, agent, frames=64)
+    mahppo_ovh = ev["t_task"] + beta * ev["e_task"]
+    near = nearest_server_eval(env)
+    load = load_aware_eval(env)
+    gr = greedy_eval(env)
+    lo = local_policy_eval(env, frames=64)
+    rows = [
+        {"policy": "mahppo", "t_task": ev["t_task"], "e_task": ev["e_task"],
+         "overhead": mahppo_ovh, "reward": ev["reward"]},
+        {"policy": "nearest_server", "t_task": near["t_task"],
+         "e_task": near["e_task"], "overhead": near["overhead"],
+         "route": near["route"]},
+        {"policy": "load_aware", "t_task": load["t_task"],
+         "e_task": load["e_task"], "overhead": load["overhead"],
+         "route": load["route"]},
+        {"policy": "greedy", "t_task": gr["t_task"], "e_task": gr["e_task"],
+         "overhead": gr["overhead"], "route": gr["route"]},
+        {"policy": "local", "t_task": lo["t_task"], "e_task": lo["e_task"],
+         "overhead": lo["t_task"] + beta * lo["e_task"],
+         "reward": lo["reward"]},
+    ]
+
+    # hot-path regression guard: pool env vs single-server env, same fleet
+    try:
+        from benchmarks.bench_hetero_fleet import _iter_us
+    except ImportError:        # run directly as a script
+        from bench_hetero_fleet import _iter_us
+    tcfg = MAHPPOConfig(horizon=512, n_envs=4, reuse=2)
+    us_single = _iter_us(make_pool_env(1), tcfg)
+    us_multi = _iter_us(env, tcfg)
+    ratio = us_multi / max(us_single, 1e-9)
+    limit = PARITY_LIMIT_SMOKE if smoke else PARITY_LIMIT
+    return {"rows": rows, "train_s": train_s,
+            "beats_nearest": bool(mahppo_ovh <= near["overhead"]),
+            "iter_us_single": us_single, "iter_us_multi": us_multi,
+            "iter_ratio": ratio,
+            "parity": [{"name": "multi_vs_single_iteration",
+                        "ratio": ratio, "limit": limit}]}
+
+
+if __name__ == "__main__":
+    out = run()
+    for r in out["rows"]:
+        extra = f" route={r['route']}" if "route" in r else ""
+        print(f"{r['policy']:>14s}: overhead {r['overhead']:.4f} "
+              f"(t {1e3*r['t_task']:.1f} ms, e {1e3*r['e_task']:.1f} mJ)"
+              f"{extra}")
+    print(f"MAHPPO {'BEATS' if out['beats_nearest'] else 'LOSES TO'} "
+          f"nearest-server greedy")
+    print(f"iteration: single {out['iter_us_single']/1e3:.1f} ms, "
+          f"pool {out['iter_us_multi']/1e3:.1f} ms "
+          f"(ratio {out['iter_ratio']:.2f}, limit {PARITY_LIMIT})")

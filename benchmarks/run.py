@@ -1,7 +1,14 @@
 """Benchmark harness entrypoint — one section per paper table/figure plus
 the roofline analysis. Prints ``name,us_per_call,derived`` CSV.
 
-  PYTHONPATH=src python -m benchmarks.run [--full] [--only SECTION]
+  PYTHONPATH=src python -m benchmarks.run [--full|--smoke] [--only SECTION]
+
+Sections that guard a jitted-iteration parity ratio (hetero, churn,
+multi_server) report it into a shared ledger; any ratio above its limit
+makes the run EXIT NONZERO with a summary line, so CI catches hot-path
+regressions instead of scrolling past them. ``--smoke`` runs the RL
+sections at tiny iteration counts (CI-sized) and still emits the
+standardized ``artifacts/BENCH_multi_server.json`` artifact.
 """
 from __future__ import annotations
 
@@ -26,13 +33,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale RL iteration counts (slow)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny iteration counts (CI smoke); artifacts are "
+                         "still written")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
     quick = not args.full
+    smoke = args.smoke
     results = {}
+    parity_checks = []   # (section, name, ratio, limit)
 
     def want(s):
         return args.only is None or args.only == s
+
+    def guard(section, name, ratio, limit):
+        parity_checks.append((section, name, float(ratio), float(limit)))
 
     print("name,us_per_call,derived")
 
@@ -144,6 +159,9 @@ def main() -> None:
                   f"overhead={r['overhead']:.4f};reward={r['reward']:.4f}")
         _emit("hetero_iter_us", out["iter_us_mixed"],
               f"homogeneous_us={out['iter_us_homogeneous']:.0f}")
+        guard("hetero", "mixed_vs_homogeneous_iteration",
+              out["iter_us_mixed"] / max(out["iter_us_homogeneous"], 1e-9),
+              1.5)
 
     if want("churn"):
         _section("dynamic fleet (UE churn: join/leave mid-episode)")
@@ -160,6 +178,38 @@ def main() -> None:
         _emit("churn_iter_us", out["iter_us_churn"],
               f"static_us={out['iter_us_static']:.0f};"
               f"ratio={out['iter_ratio']:.2f}")
+        guard("churn", "churn_vs_static_iteration", out["iter_ratio"], 1.5)
+
+    if want("multi_server"):
+        _section("multi-server edge pool (routed action space)")
+        from benchmarks import bench_multi_server
+        out = bench_multi_server.run(quick=quick, smoke=smoke)
+        results["multi_server"] = out
+        for r in out["rows"]:
+            _emit(f"multi_server_{r['policy']}", 0.0,
+                  f"overhead={r['overhead']:.4f};"
+                  f"t_ms={1e3*r['t_task']:.1f};"
+                  f"e_mJ={1e3*r['e_task']:.1f}"
+                  + (f";route={''.join(map(str, r['route']))}"
+                     if "route" in r else ""))
+        _emit("multi_server_iter_us", out["iter_us_multi"],
+              f"single_us={out['iter_us_single']:.0f};"
+              f"ratio={out['iter_ratio']:.2f};"
+              f"beats_nearest={out['beats_nearest']}")
+        for p in out["parity"]:
+            guard("multi_server", p["name"], p["ratio"], p["limit"])
+        os.makedirs("artifacts", exist_ok=True)
+        artifact = {"bench": "multi_server", "schema": 1,
+                    "smoke": smoke, "quick": quick,
+                    "rows": out["rows"],
+                    "beats_nearest": out["beats_nearest"],
+                    "iter_us_single": out["iter_us_single"],
+                    "iter_us_multi": out["iter_us_multi"],
+                    "iter_ratio": out["iter_ratio"],
+                    "parity": out["parity"]}
+        with open("artifacts/BENCH_multi_server.json", "w") as f:
+            json.dump(artifact, f, indent=1, default=float)
+        print("# wrote artifacts/BENCH_multi_server.json", flush=True)
 
     if want("archs"):
         _section("fig13 other backbones (+ assigned archs)")
@@ -195,6 +245,18 @@ def main() -> None:
     with open("artifacts/bench_results.json", "w") as f:
         json.dump(results, f, indent=1, default=float)
     print("# wrote artifacts/bench_results.json", flush=True)
+
+    # fail LOUDLY on any jitted-iteration parity regression: a hot-path
+    # slowdown must stop the build, not scroll past as a ratio.
+    failures = [(s, n, r, lim) for s, n, r, lim in parity_checks if r > lim]
+    for s, n, r, lim in parity_checks:
+        status = "FAIL" if r > lim else "ok"
+        print(f"# parity[{s}] {n}: ratio {r:.2f} (limit {lim:.2f}) "
+              f"{status}", flush=True)
+    if failures:
+        print(f"# PARITY REGRESSION: {len(failures)}/{len(parity_checks)} "
+              "guard(s) exceeded their limit", flush=True)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -15,6 +15,14 @@ SoC — plus two reduced-transformer UEs on phone NPUs) with MAHPPO over the
 per-UE split tables, and prints each UE's learned split decision:
 
   PYTHONPATH=src python examples/collaborative_serve.py --fleet
+
+With ``--servers E`` the edge side becomes a POOL of E servers (TPU-v5e
+near the cell center, weaker/farther tiers behind it): the action space
+grows a `route` head, and the demo prints each UE's learned (split,
+server) decision plus the fleet's load distribution vs the
+nearest-server baseline:
+
+  PYTHONPATH=src python examples/collaborative_serve.py --servers 2
 """
 import argparse
 
@@ -70,12 +78,14 @@ def run_split_forward(params, cfg, tokens, split_layer, ae, bits=8):
 
 
 def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
-                   leave_rate=0.0):
+                   leave_rate=0.0, n_servers=1):
     """Mixed-fleet scheduling: per-UE split tables + device tiers end-to-end
     through MAHPPO, vs the non-coordinating greedy heuristic. With nonzero
     churn/leave rates the fleet is DYNAMIC: UEs join from a standby pool and
-    drop mid-episode, and the policy schedules whoever is present."""
-    from repro.core.fleets import make_mixed_fleet
+    drop mid-episode, and the policy schedules whoever is present. With
+    n_servers > 1 the edge side is an EdgePool and routing is part of the
+    learned action."""
+    from repro.core.fleets import make_edge_pool, make_mixed_fleet
     from repro.env.mecenv import MECEnv, make_env_params
     from repro.rl.heuristics import greedy_eval
     from repro.rl.mahppo import MAHPPOConfig, evaluate_policy, train_mahppo
@@ -87,10 +97,18 @@ def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
         print(f"  ue{i}: {name:14s} on {prof.name:12s} "
               f"(P_compute={prof.p_compute:.1f} W, "
               f"{feas}/{fleet.n_actions} feasible actions)")
+    pool = make_edge_pool(n_servers) if n_servers > 1 else None
+    if pool is not None:
+        print("edge pool:")
+        for e, srv in enumerate(pool.servers):
+            print(f"  srv{e}: {srv.name:10s} dist x{srv.dist_scale:.1f}  "
+                  f"bw x{srv.bw_scale:.1f}  "
+                  f"edge_speed={srv.edge_speed/1e12:.1f} TFLOP/s")
 
     env = MECEnv(make_env_params(fleet, n_channels=2,
                                  churn_rate=churn_rate,
-                                 leave_rate=leave_rate))
+                                 leave_rate=leave_rate, pool=pool))
+    print(f"action space: {', '.join(env.action_space.names)}")
     demo_active = None         # representative membership for the baselines
     if env.dynamic:
         print(f"dynamic fleet: join intensity {churn_rate}, "
@@ -101,9 +119,12 @@ def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
         demo_active = np.asarray(s.active)
         for t in range(24):
             n = env.params.n_ue
-            b = jnp.full((n,), env.n_actions_b - 1, jnp.int32)
-            s, _, done, info = env.step(s, b, jnp.zeros((n,), jnp.int32),
-                                        jnp.full((n,), 0.05))
+            acts = {"split": jnp.full((n,), env.n_actions_b - 1, jnp.int32),
+                    "channel": jnp.zeros((n,), jnp.int32),
+                    "power": jnp.full((n,), 0.05)}
+            if env.multi_server:
+                acts["route"] = jnp.zeros((n,), jnp.int32)
+            s, _, done, info = env.step(s, acts)
             if bool(done):
                 break               # post-done state is the auto-reset fleet
             trace.append("".join("#" if a else "." for a in
@@ -136,18 +157,35 @@ def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
           f"overhead {ev['t_task'] + beta*ev['e_task']:.4f}")
     print(f"greedy : latency {1e3*gr['t_task']:.1f} ms  "
           f"energy {1e3*gr['e_task']:.1f} mJ  "
-          f"overhead {gr['overhead']:.4f}  (per-UE b={gr['b']})")
+          f"overhead {gr['overhead']:.4f}  (per-UE b={gr['b']}"
+          + (f", route={gr['route']}" if "route" in gr else "") + ")")
+    if env.multi_server:
+        from repro.rl.baselines import load_aware_eval, nearest_server_eval
+        near = nearest_server_eval(env, active=demo_active)
+        load = load_aware_eval(env, active=demo_active)
+        print(f"nearest: overhead {near['overhead']:.4f}  "
+              f"(route={near['route']})")
+        print(f"loadbal: overhead {load['overhead']:.4f}  "
+              f"(route={load['route']})")
 
-    # learned per-UE split decisions at the eval state
+    # learned per-UE decisions at the eval state
     from repro.rl.mahppo import _policy_all
+    space = env.action_space
     s = env.reset(jax.random.PRNGKey(0), eval_mode=True)
-    mask = env.action_mask()
-    lb, _, _, _ = _policy_all(agent["actors"], env.observe(s), mask)
-    b_star = np.asarray(jnp.argmax(jnp.where(mask, lb, -jnp.inf), -1))
-    for i, b in enumerate(b_star):
+    masks = env.action_masks()
+    dist = _policy_all(agent["actors"], space, env.observe(s), masks)
+    a_star = jax.vmap(space.mode)(dist, masks)
+    for i, b in enumerate(np.asarray(a_star["split"])):
         kind = ("raw offload" if b == 0 else
                 "full local" if b == env.n_actions_b - 1 else f"split b={b}")
-        print(f"  ue{i} ({fleet.names[i]}): {kind}")
+        where = f" -> srv{int(a_star['route'][i])}" \
+            if env.multi_server and b != env.n_actions_b - 1 else ""
+        print(f"  ue{i} ({fleet.names[i]}): {kind}{where}")
+    if env.multi_server:
+        counts = np.bincount(np.asarray(a_star["route"]),
+                             minlength=env.n_servers)
+        print(f"  learned route distribution: "
+              + ", ".join(f"srv{e}={int(c)}" for e, c in enumerate(counts)))
 
 
 def main():
@@ -170,18 +208,22 @@ def main():
     ap.add_argument("--leave-rate", type=float, default=None,
                     help="per-frame departure probability of an active UE "
                          "(default 0.1 when churning; implies --churn)")
+    ap.add_argument("--servers", type=int, default=1, metavar="E",
+                    help="size of the edge pool (E > 1 adds a learned "
+                         "`route` action head; implies --fleet)")
     ap.add_argument("--iterations", type=int, default=15)
     args = ap.parse_args()
 
     churn = (args.churn or args.churn_rate is not None
              or args.leave_rate is not None)
-    if args.fleet or churn:
+    if args.fleet or churn or args.servers > 1:
         run_fleet_demo(
             args.arch, args.iterations,
             churn_rate=(0.2 if args.churn_rate is None
                         else args.churn_rate) if churn else 0.0,
             leave_rate=(0.1 if args.leave_rate is None
-                        else args.leave_rate) if churn else 0.0)
+                        else args.leave_rate) if churn else 0.0,
+            n_servers=args.servers)
         return
 
     cfg = reduced(get_config(args.arch), n_layers=4)

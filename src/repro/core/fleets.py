@@ -1,8 +1,12 @@
-"""Canonical demo fleets. The mixed 4-UE fleet below is shared by
-``examples/collaborative_serve.py --fleet`` and
-``benchmarks/bench_hetero_fleet.py`` so the demo, the benchmark, and the
-docs all describe the same scenario."""
+"""Canonical demo fleets and edge pools. The mixed 4-UE fleet below is
+shared by ``examples/collaborative_serve.py --fleet`` and
+``benchmarks/bench_hetero_fleet.py``; the 2-server pool is shared by
+``--servers`` and ``benchmarks/bench_multi_server.py`` — so the demos,
+the benchmarks, and the docs all describe the same scenarios."""
 from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
 
 from repro.core import overhead as oh
 from repro.core.cnn import make_resnet18
@@ -23,3 +27,50 @@ def make_mixed_fleet(arch: str = "qwen3-1.7b") -> FleetPlan:
              transformer_split_table(tcfg, ue_dev=oh.PHONE_NPU)]
     return build_fleet(plans, [oh.JETSON_NANO, oh.IOT_SOC,
                                oh.PHONE_NPU, oh.PHONE_NPU])
+
+
+# ---------------------------------------------------------------- edge side
+@dataclasses.dataclass(frozen=True)
+class EdgePool:
+    """The edge side of the scenario: an ordered set of servers the
+    `route` action head picks between. A pool of one paper-default server
+    is the seed scenario — the env compiles the routing machinery out and
+    stays bit-for-bit identical to the single-server env."""
+    servers: Tuple[oh.ServerProfile, ...]
+
+    def __post_init__(self):
+        if not self.servers:
+            raise ValueError("EdgePool needs at least one server")
+        names = [s.name for s in self.servers]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate server names: {names}")
+
+    @property
+    def n_servers(self) -> int:
+        return len(self.servers)
+
+    @property
+    def is_single_paper_server(self) -> bool:
+        return self.n_servers == 1 and self.servers[0].is_paper_default
+
+
+def single_server() -> EdgePool:
+    """The paper's scenario: one TPU-v5e-class server at the cell center,
+    instantaneous edge inference."""
+    return EdgePool((oh.ServerProfile("tpu-v5e"),))
+
+
+def make_edge_pool(n: int = 2) -> EdgePool:
+    """Canonical demo pool: a TPU-v5e at the cell center, then
+    progressively farther / weaker tiers. With the default 2 servers a
+    nearest-server policy piles every UE onto the v5e's two channels and
+    pays the interference; spreading load across the farther edge-gpu
+    (interference-free but ~1.4x the path loss distance) is the better
+    joint policy MAHPPO should find."""
+    tiers = [oh.ServerProfile("tpu-v5e", oh.TPU_V5E, 1.0, 1.0, 0.0),
+             oh.ServerProfile.from_device(oh.EDGE_GPU, dist_scale=1.4),
+             oh.ServerProfile.from_device(oh.EDGE_NUC, dist_scale=1.8,
+                                          bw_scale=0.8)]
+    if not 1 <= n <= len(tiers):
+        raise ValueError(f"demo pool supports 1..{len(tiers)} servers")
+    return EdgePool(tuple(tiers[:n]))

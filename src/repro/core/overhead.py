@@ -61,6 +61,43 @@ class DeviceProfile:
         return cls(dev.name, dev.active_power, dev)
 
 
+# Weaker edge tiers for multi-server pools: a rack GPU and a fanless NUC.
+EDGE_GPU = DeviceModel("edge-gpu", 5.0e12, 3.0e11, 70.0, 1.2e10)
+EDGE_NUC = DeviceModel("edge-nuc", 8.0e11, 6.0e10, 28.0, 8e9)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerProfile:
+    """One edge server of an EdgePool, as the MEC env sees it.
+
+    ``dist_scale`` multiplies each UE's distance for uplinks to THIS
+    server (servers sit at different points of the cell), ``bw_scale``
+    multiplies the per-channel bandwidth of this server's own uplink
+    channels, and ``edge_speed`` is the effective FLOP/s the server
+    devotes to finishing offloaded inferences — 0.0 keeps the paper's
+    assumption of an instantaneous edge. A profile with all three at
+    their defaults is the paper's single server: the env compiles the
+    routing machinery out entirely and is bit-for-bit the seed env."""
+    name: str
+    device: DeviceModel = TPU_V5E
+    dist_scale: float = 1.0
+    bw_scale: float = 1.0
+    edge_speed: float = 0.0      # 0.0 = instant edge (paper assumption)
+
+    @property
+    def is_paper_default(self) -> bool:
+        return (self.dist_scale == 1.0 and self.bw_scale == 1.0
+                and self.edge_speed == 0.0)
+
+    @classmethod
+    def from_device(cls, dev: DeviceModel, *, dist_scale=1.0, bw_scale=1.0,
+                    utilization=0.3) -> "ServerProfile":
+        """A server whose edge-side inference runs at ``utilization`` of
+        the device's peak (edge chips juggle many tenants)."""
+        return cls(dev.name, dev, dist_scale, bw_scale,
+                   dev.peak_flops * utilization)
+
+
 def module_time_energy(flops: float, bytes_moved: float, dev: DeviceModel):
     t = max(flops / dev.peak_flops, bytes_moved / dev.mem_bw)
     return t, t * dev.active_power

@@ -1,4 +1,5 @@
-"""Wireless uplink model (paper §3.3, Eq. 5).
+"""Wireless uplink model (paper §3.3, Eq. 5), extended to multi-server
+edge pools.
 
 Urban cellular: channel gain g_n = d_n^-l (path-loss exponent l=3), static
 channels with bandwidth omega and background noise sigma. The uplink rate of
@@ -6,6 +7,13 @@ UE n under policy-induced interference is
 
   r_n = omega_c * log2(1 + p_n g_n / (sigma_c + sum_{i != n, c_i = c_n,
                                        i offloading} p_i g_i))
+
+With an edge POOL every server operates its own set of C channels:
+omega/sigma become (E, C) and each UE's `route` e_n selects the server.
+Interference then couples only UEs sharing the same (server, channel)
+slot — routing load across servers is how a policy buys itself clean
+spectrum. A single server (route=None, 1-D omega/sigma) is exactly the
+paper's model, computed by the identical graph.
 """
 from __future__ import annotations
 
@@ -17,15 +25,22 @@ def channel_gain(d, pathloss=3.0):
     return jnp.power(jnp.maximum(d, 1.0), -pathloss)
 
 
-def uplink_rates(p, c, g, transmitting, *, omega, sigma):
-    """p, g: (N,) watts/gains; c: (N,) int channel ids;
-    transmitting: (N,) bool (offloading AND has work).
-    omega, sigma: (C,) per-channel bandwidth (Hz) and noise (W).
+def uplink_rates(p, c, g, transmitting, *, omega, sigma, route=None):
+    """p, g: (N,) watts/gains (g already includes the UE->server path);
+    c: (N,) int channel ids; transmitting: (N,) bool (offloading AND has
+    work). omega, sigma: per-channel bandwidth (Hz) and noise (W) — (C,)
+    for a single server, or (E, C) with `route` (N,) int server ids.
     Returns (N,) bits/s."""
     pg = p * g * transmitting
-    n_ch = omega.shape[0]
-    onehot = jax.nn.one_hot(c, n_ch, dtype=pg.dtype)    # (N, C)
-    per_channel = onehot.T @ pg                          # (C,) total power
-    interference = per_channel[c] - pg                   # exclude self
-    sinr = (p * g) / (sigma[c] + interference)
-    return omega[c] * jnp.log2(1.0 + sinr)
+    if route is None:
+        slot, n_slots = c, omega.shape[0]
+        om, sg = omega[c], sigma[c]
+    else:
+        n_ch = omega.shape[1]
+        slot, n_slots = route * n_ch + c, omega.size
+        om, sg = omega[route, c], sigma[route, c]
+    onehot = jax.nn.one_hot(slot, n_slots, dtype=pg.dtype)   # (N, E*C)
+    per_slot = onehot.T @ pg                                 # total power
+    interference = per_slot[slot] - pg                       # exclude self
+    sinr = (p * g) / (sg + interference)
+    return om * jnp.log2(1.0 + sinr)

@@ -1,8 +1,14 @@
 """Multi-agent collaborative-inference MEC environment (paper §3–4).
 
 State s_t = {k_t, l_t, n_t, d} (remaining tasks, remaining local seconds of
-the half-completed task, remaining offload bits, UE distances). Action per UE
-a = (b, c, p): split point, channel, transmit power. Reward (Eq. 12):
+the half-completed task, remaining offload bits, UE distances). Actions are
+a flat dict pytree keyed by the env's declarative
+:class:`~repro.rl.actionspace.HybridActionSpace` (``env.action_space``):
+
+    {"split": b, "channel": c, "power": p}            single server
+    {"split": b, "channel": c, "route": e, "power": p}  edge pool
+
+Reward (Eq. 12):
 
     r_t = -T0 / K_t - beta * E_t / K_t
 
@@ -26,17 +32,35 @@ structure. Inactive UEs contribute no interference, energy, completions,
 or reward; a re-joining UE draws a fresh task queue and distance. With
 both rates at 0.0 the dynamic machinery is compiled out entirely and the
 env is bit-for-bit identical to the static one (same PRNG key stream).
+
+The EDGE side may be a POOL: a ``core.fleets.EdgePool`` of E servers with
+distinct compute tiers, positions (per-server distance scaling of the
+path loss), and per-server uplink channels (omega/sigma become (E, C)).
+The action space then grows a discrete ``route`` head: interference
+couples only UEs on the same (server, channel) slot, and each offloaded
+task pays an edge-service time t_edge[n, b, e] * (number of UEs sharing
+server e) — a processor-sharing model of the server's compute, resolved
+analytically within the frame. Phase-1/3 boundary tasks only track their
+UE-side seconds and bits (their edge tail is pipelined across frames);
+the edge term rate-limits the whole-task throughput of phase 2, which
+dominates whenever queues are deep. A pool of ONE paper-default server
+compiles all of this out: `self.multi_server` is a Python-level flag, so
+the single-server env is bit-for-bit the seed env, PRNG stream included.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Union
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import overhead as oh
+from repro.core.fleets import EdgePool
 from repro.core.split import FleetPlan, SplitPlan
 from repro.env.channel import channel_gain, uplink_rates
+from repro.rl.actionspace import (ContinuousHead, DiscreteHead,
+                                  HybridActionSpace)
 
 
 class EnvParams(NamedTuple):
@@ -46,16 +70,18 @@ class EnvParams(NamedTuple):
     p_compute: jnp.ndarray  # (N,) per-UE compute power (W)
     t0: jnp.ndarray         # frame seconds
     beta: jnp.ndarray
-    omega: jnp.ndarray      # (C,)
-    sigma: jnp.ndarray      # (C,)
+    omega: jnp.ndarray      # (C,) single server, (E, C) edge pool
+    sigma: jnp.ndarray      # (C,) / (E, C)
     p_max: jnp.ndarray
     lam_tasks: jnp.ndarray  # Poisson mean of K_n
     d_low: jnp.ndarray
     d_high: jnp.ndarray
     n_ue: int
     pathloss: jnp.ndarray
-    churn_rate: jnp.ndarray = 0.0  # Poisson join intensity per standby slot
-    leave_rate: jnp.ndarray = 0.0  # per-frame departure prob (geometric)
+    churn_rate: jnp.ndarray = jnp.float32(0.0)  # Poisson joins / standby slot
+    leave_rate: jnp.ndarray = jnp.float32(0.0)  # per-frame departure prob
+    server_dist: Optional[jnp.ndarray] = None   # (E,) distance scale per server
+    t_edge: Optional[jnp.ndarray] = None        # (N, B_max+2, E) edge seconds
 
 
 def per_ue(table: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
@@ -64,15 +90,38 @@ def per_ue(table: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return jnp.take_along_axis(table, b[:, None], axis=1)[:, 0]
 
 
+def _ue_tables(plan, n_ue):
+    """(t_local, feasible, peak_flops) per UE as numpy, for the edge-side
+    service-time table (t_edge ~ remaining FLOPs / server speed, with
+    remaining FLOPs ~ (t_local_full - t_local_b) * ue_peak)."""
+    if isinstance(plan, FleetPlan):
+        t_loc = np.asarray(plan.t_local, np.float64)
+        feas = np.asarray(plan.feasible, bool)
+        peaks = np.array([pr.device.peak_flops for pr in plan.profiles])
+    else:
+        t_loc = np.tile(np.asarray(plan.t_local, np.float64)[None],
+                        (n_ue, 1))
+        feas = np.tile(np.asarray(plan.feasible, bool)[None], (n_ue, 1))
+        dev = oh.UE_TIERS.get(plan.device, oh.JETSON_NANO) \
+            if plan.device else oh.JETSON_NANO
+        peaks = np.full((n_ue,), dev.peak_flops)
+    return t_loc, feas, peaks
+
+
 def make_env_params(plan: Union[SplitPlan, FleetPlan], *, n_ue=5,
                     n_channels=2, t0=0.5, beta=0.47, p_compute=None,
                     omega=1e6, sigma=1e-9, p_max=0.5, lam_tasks=200.0,
                     d_low=1.0, d_high=100.0, pathloss=3.0,
-                    churn_rate=0.0, leave_rate=0.0) -> EnvParams:
+                    churn_rate=0.0, leave_rate=0.0,
+                    pool: Optional[EdgePool] = None) -> EnvParams:
     """A single SplitPlan is broadcast to n_ue identical UEs (the seed
     homogeneous scenario); a FleetPlan supplies per-UE tables and device
     power draws (n_ue/p_compute then come from the fleet). Nonzero
-    churn_rate/leave_rate make the fleet dynamic (see module docstring)."""
+    churn_rate/leave_rate make the fleet dynamic, and an EdgePool of more
+    than one server (or one non-default server) makes the edge side
+    heterogeneous with a routed action space (see module docstring). A
+    pool of one paper-default server builds EXACTLY the single-server
+    params, bit-for-bit."""
     if isinstance(plan, FleetPlan):
         n_ue = plan.n_ue
         l_new = jnp.asarray(plan.t_local + plan.t_comp, jnp.float32)
@@ -88,16 +137,36 @@ def make_env_params(plan: Union[SplitPlan, FleetPlan], *, n_ue=5,
         feasible = jnp.tile(jnp.asarray(plan.feasible)[None], (n_ue, 1))
         p_vec = jnp.full((n_ue,), 2.1 if p_compute is None else p_compute,
                          jnp.float32)
+
+    if pool is None or pool.is_single_paper_server:
+        omega_t = jnp.full((n_channels,), omega, jnp.float32)
+        sigma_t = jnp.full((n_channels,), sigma, jnp.float32)
+        server_dist = t_edge = None
+    else:
+        bw = np.array([s.bw_scale for s in pool.servers])      # (E,)
+        omega_t = jnp.asarray(bw[:, None] * np.full((n_channels,), omega),
+                              jnp.float32)
+        sigma_t = jnp.full((pool.n_servers, n_channels), sigma, jnp.float32)
+        server_dist = jnp.asarray([s.dist_scale for s in pool.servers],
+                                  jnp.float32)
+        t_loc, feas_np, peaks = _ue_tables(plan, n_ue)
+        speed = np.array([s.edge_speed for s in pool.servers])
+        work = np.maximum(t_loc[:, -1:] - t_loc, 0.0) * peaks[:, None]
+        te = work[:, :, None] / np.where(speed > 0, speed, np.inf)
+        te[~feas_np] = 0.0        # padded slots stay inert (t_task == 0)
+        te[:, -1] = 0.0           # full-local never touches the edge
+        t_edge = jnp.asarray(te, jnp.float32)
+
     return EnvParams(
         l_new=l_new, n_new=n_new, feasible=feasible, p_compute=p_vec,
         t0=jnp.float32(t0), beta=jnp.float32(beta),
-        omega=jnp.full((n_channels,), omega, jnp.float32),
-        sigma=jnp.full((n_channels,), sigma, jnp.float32),
+        omega=omega_t, sigma=sigma_t,
         p_max=jnp.float32(p_max), lam_tasks=jnp.float32(lam_tasks),
         d_low=jnp.float32(d_low), d_high=jnp.float32(d_high),
         n_ue=n_ue, pathloss=jnp.float32(pathloss),
         churn_rate=jnp.float32(churn_rate),
-        leave_rate=jnp.float32(leave_rate))
+        leave_rate=jnp.float32(leave_rate),
+        server_dist=server_dist, t_edge=t_edge)
 
 
 class EnvState(NamedTuple):
@@ -113,20 +182,37 @@ class EnvState(NamedTuple):
 class MECEnv:
     """Functional env; all methods are jit/vmap friendly.
 
-    `self.dynamic` is a Python-level flag fixed at construction: when both
-    churn rates are 0.0 every churn branch below is skipped at trace time,
-    so the compiled static env is exactly the pre-churn one (identical
-    computation graph AND identical PRNG key stream).
-    """
+    `self.dynamic` and `self.multi_server` are Python-level flags fixed at
+    construction: when both churn rates are 0.0 every churn branch below
+    is skipped at trace time, and with a single paper-default server every
+    routing branch is too — the compiled single-server static env is
+    exactly the seed one (identical computation graph AND identical PRNG
+    key stream).
+
+    `self.action_space` declares the hybrid action heads; `step` consumes
+    the matching actions dict. Per-actor feasibility lives on the space
+    (`action_masks` adds the state-dependent restriction for dynamic
+    fleets)."""
 
     def __init__(self, params: EnvParams):
         self.params = params
         self.n_actions_b = int(params.l_new.shape[1])
-        self.n_channels = int(params.omega.shape[0])
+        self.n_channels = int(params.omega.shape[-1])
+        self.multi_server = params.omega.ndim == 2
+        self.n_servers = int(params.omega.shape[0]) if self.multi_server \
+            else 1
         self.dynamic = bool(float(params.churn_rate) > 0.0
                             or float(params.leave_rate) > 0.0)
         # dynamic fleets append an activity flag + fleet-size feature per UE
         self.obs_dim = (6 if self.dynamic else 4) * params.n_ue
+        discrete = [DiscreteHead("split", self.n_actions_b),
+                    DiscreteHead("channel", self.n_channels)]
+        if self.multi_server:
+            discrete.append(DiscreteHead("route", self.n_servers))
+        self.action_space = HybridActionSpace(
+            discrete=tuple(discrete),
+            continuous=(ContinuousHead("power", 1e-4, float(params.p_max)),),
+            masks={"split": params.feasible})
 
     def reset(self, key, *, eval_mode=False) -> EnvState:
         p = self.params
@@ -154,24 +240,53 @@ class MECEnv:
             base += [act, frac]
         return jnp.concatenate(base)
 
-    def action_mask(self, s: EnvState = None):
-        """(N, B_max+2) per-UE feasibility; padded fleet actions are False.
-        Given a state in a dynamic env, inactive UEs are further restricted
-        to the always-feasible full-local action (the last one) so dead
-        actors make one deterministic no-op choice instead of wandering the
-        action space."""
-        feas = self.params.feasible
+    def action_masks(self, s: EnvState = None):
+        """Per-head feasibility masks ({head: (N, n) bool}; heads without
+        an entry are unrestricted). The split head carries the per-UE
+        table feasibility; given a state in a dynamic env, inactive UEs
+        are further restricted to the always-feasible full-local action
+        (the last one) so dead actors make one deterministic no-op choice
+        instead of wandering the action space."""
+        feas = self.action_space.masks["split"]   # == params.feasible
         if s is None or not self.dynamic:
-            return feas
+            return {"split": feas}
         local_only = jnp.zeros_like(feas).at[:, -1].set(True)
-        return jnp.where(s.active[:, None], feas, local_only)
+        return {"split": jnp.where(s.active[:, None], feas, local_only)}
 
-    def step(self, s: EnvState, b, c, p_tx):
-        """b, c: (N,) int32; p_tx: (N,) float in (0, p_max].
+    # ------------------------------------------------------------ physics
+    def _rates(self, d, c, p_tx, route, transmitting):
+        """Per-UE uplink rates at distances d under the joint action (the
+        pool's per-server path loss and channels when routed)."""
+        prm = self.params
+        if self.multi_server:
+            g = channel_gain(d * prm.server_dist[route], prm.pathloss)
+            r = uplink_rates(p_tx, c, g, transmitting, omega=prm.omega,
+                             sigma=prm.sigma, route=route)
+        else:
+            g = channel_gain(d, prm.pathloss)
+            r = uplink_rates(p_tx, c, g, transmitting, omega=prm.omega,
+                             sigma=prm.sigma)
+        return jnp.maximum(r, 1.0)  # avoid div-by-zero; 1 b/s floor
+
+    def _edge_seconds(self, b, route, offloads):
+        """Per-task edge service time under processor sharing: each
+        offloaded task at split b on server e takes t_edge[n, b, e] times
+        the number of UEs concurrently offloading to e."""
+        prm = self.params
+        te = prm.t_edge[jnp.arange(prm.n_ue), b, route]
+        load = jax.nn.one_hot(route, self.n_servers,
+                              dtype=te.dtype).T @ offloads.astype(te.dtype)
+        return te * jnp.maximum(load[route], 1.0), load
+
+    def step(self, s: EnvState, actions):
+        """actions: dict pytree matching `self.action_space` — (N,) int32
+        per discrete head, (N,) float physical watts for "power" (clamped
+        into the head's bounds here, the single enforcement point).
         Returns (next_state, reward, done, info)."""
         prm = self.params
-        p_tx = jnp.clip(p_tx, 1e-4, prm.p_max)
-        g = channel_gain(s.d, prm.pathloss)
+        a = self.action_space.clip(actions)
+        b, c, p_tx = a["split"], a["channel"], a["power"]
+        route = a["route"] if self.multi_server else None
         act = s.active
         # inactive UEs do no work: no compute, no tx, no interference. With
         # act all-True (static env) the & is an exact identity, so the
@@ -181,9 +296,7 @@ class MECEnv:
         n_new = per_ue(prm.n_new, b)
         # a UE contributes interference if it offloads anything this frame
         offloads = ((s.n > 0) | (n_new > 0)) & has_work
-        r = uplink_rates(p_tx, c, g, offloads, omega=prm.omega,
-                         sigma=prm.sigma)
-        r = jnp.maximum(r, 1.0)  # avoid div-by-zero; 1 b/s floor
+        r = self._rates(s.d, c, p_tx, route, offloads)
 
         t_rem = jnp.full_like(s.l, prm.t0)
         energy = jnp.zeros_like(s.l)
@@ -206,6 +319,10 @@ class MECEnv:
 
         # ---- phase 2: whole new tasks at the new split b
         t_task = l_new + n_new / r
+        server_load = None
+        if self.multi_server:
+            te_eff, server_load = self._edge_seconds(b, route, offloads)
+            t_task = t_task + te_eff
         can = (k1 > 0) & (t_task > 0) & act
         m = jnp.where(can, jnp.floor(t_rem / jnp.maximum(t_task, 1e-9)), 0.0)
         m = jnp.minimum(m, k1)
@@ -214,8 +331,10 @@ class MECEnv:
         t_rem = t_rem - m * t_task
         energy += m * (l_new * prm.p_compute + (n_new / r) * p_tx)
 
-        # ---- phase 3: start one partial task
-        start = (k2 > 0) & (t_rem > 0) & act
+        # ---- phase 3: start one partial task. A task must have SOME work
+        # (l_new + n_new > 0; true for every feasible action) — otherwise a
+        # forced padded action would mint one free completion per frame.
+        start = (k2 > 0) & (t_rem > 0) & (l_new + n_new > 0) & act
         dt_l2 = jnp.minimum(l_new, t_rem) * start
         t_rem2 = t_rem - dt_l2
         energy += dt_l2 * prm.p_compute
@@ -277,4 +396,26 @@ class MECEnv:
                 "rate_mean": r.mean(), "offloads": offloads.sum(),
                 "n_active": act.sum(), "spawned": spawned,
                 "dropped": dropped}
+        if self.multi_server:
+            info["server_load"] = server_load
         return nxt, reward, done, info
+
+    def task_overhead(self, s: EnvState, actions):
+        """Realized per-task latency/energy vectors (Eq. 7/8) for each UE
+        under this frame's joint interference (and, with an edge pool,
+        the routed servers' shared compute). Used by policy evaluation;
+        the same head-dict contract as `step`."""
+        prm = self.params
+        a = self.action_space.clip(actions)
+        b, c, p_tx = a["split"], a["channel"], a["power"]
+        route = a["route"] if self.multi_server else None
+        l_b = per_ue(prm.l_new, b)
+        n_b = per_ue(prm.n_new, b)
+        offl = (n_b > 0) & s.active
+        r = self._rates(s.d, c, p_tx, route, offl)
+        t = l_b + n_b / r
+        if self.multi_server:
+            te_eff, _ = self._edge_seconds(b, route, offl)
+            t = t + te_eff
+        e = l_b * prm.p_compute + (n_b / r) * p_tx
+        return t, e

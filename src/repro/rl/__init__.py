@@ -1,2 +1,25 @@
-from repro.rl.mahppo import MAHPPOConfig, evaluate_policy, train_mahppo
-from repro.rl.baselines import local_policy_eval
+"""MAHPPO scheduler stack.
+
+``repro.env.mecenv`` consumes ``repro.rl.actionspace`` for its
+declarative action space, so this package init must not import the
+training stack eagerly (mecenv -> rl -> mahppo -> mecenv would be a
+circular import). The historical conveniences (``from repro.rl import
+train_mahppo`` etc.) are kept working via lazy PEP-562 attribute access;
+add new re-exports to ``_LAZY``, never as top-level imports.
+"""
+_LAZY = {
+    "MAHPPOConfig": "repro.rl.mahppo",
+    "train_mahppo": "repro.rl.mahppo",
+    "evaluate_policy": "repro.rl.mahppo",
+    "local_policy_eval": "repro.rl.baselines",
+    "HybridActionSpace": "repro.rl.actionspace",
+    "DiscreteHead": "repro.rl.actionspace",
+    "ContinuousHead": "repro.rl.actionspace",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module 'repro.rl' has no attribute {name!r}")

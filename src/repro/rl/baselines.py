@@ -1,4 +1,13 @@
-"""Baselines (paper §6.3.1): full-local, and fixed/random policies."""
+"""Baselines (paper §6.3.1): full-local and random policies, plus — on a
+multi-server edge pool — two fixed-routing references:
+
+* nearest-server greedy: every UE offloads at its clean-channel-optimal
+  split but routes to the CLOSEST server (what a routing-oblivious
+  deployment does). The whole fleet piles onto one server's channels and
+  pays the interference — the gap MAHPPO should close by spreading load.
+* load-aware round-robin: same per-UE splits, but UEs are dealt across
+  servers round-robin (balanced UE count, still interference-oblivious).
+"""
 from __future__ import annotations
 
 import jax
@@ -6,6 +15,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.env.mecenv import MECEnv, per_ue
+
+
+def _act(env: MECEnv, b, c, p, route=None):
+    """Assemble the env's actions dict (adding a default route head on
+    multi-server envs so hand-written policies stay terse)."""
+    a = {"split": b, "channel": c, "power": p}
+    if env.multi_server:
+        a["route"] = jnp.zeros_like(b) if route is None else route
+    return a
 
 
 def local_policy_eval(env: MECEnv, *, frames=64, seed=0):
@@ -23,7 +41,7 @@ def local_policy_eval(env: MECEnv, *, frames=64, seed=0):
             b = jnp.full((n,), b_local, jnp.int32)
             c = jnp.zeros((n,), jnp.int32)
             p = jnp.full((n,), 0.01)
-            s2, reward, done, info = env.step(s, b, c, p)
+            s2, reward, done, info = env.step(s, _act(env, b, c, p))
             act = s.active.astype(jnp.float32)
             n_act = jnp.maximum(act.sum(), 1.0)
             t_task = per_ue(env.params.l_new, b)
@@ -42,8 +60,9 @@ def local_policy_eval(env: MECEnv, *, frames=64, seed=0):
 
 def random_policy_eval(env: MECEnv, *, frames=64, seed=0):
     """Uniform over each UE's OWN feasible actions (padded/infeasible
-    entries carry -inf logits and are never drawn). On dynamic fleets the
-    state-dependent mask pins inactive UEs to the inert full-local action."""
+    entries carry -inf logits and are never drawn) — and uniform over
+    servers on an edge pool. On dynamic fleets the state-dependent mask
+    pins inactive UEs to the inert full-local action."""
 
     @jax.jit
     def rollout(key):
@@ -51,14 +70,18 @@ def random_policy_eval(env: MECEnv, *, frames=64, seed=0):
 
         def body(s, sub):
             n = env.params.n_ue
-            rand_logits = jnp.where(env.action_mask(s), 0.0, -jnp.inf)
-            kb, kc, kp = jax.random.split(sub, 3)
+            mask = env.action_masks(s)["split"]
+            rand_logits = jnp.where(mask, 0.0, -jnp.inf)
+            keys = jax.random.split(sub, 4 if env.multi_server else 3)
             b = jax.vmap(jax.random.categorical)(
-                jax.random.split(kb, n), rand_logits).astype(jnp.int32)
-            c = jax.random.randint(kc, (n,), 0, env.n_channels)
-            p = jax.random.uniform(kp, (n,), minval=0.01,
+                jax.random.split(keys[0], n), rand_logits).astype(jnp.int32)
+            c = jax.random.randint(keys[1], (n,), 0, env.n_channels)
+            p = jax.random.uniform(keys[2], (n,), minval=0.01,
                                    maxval=env.params.p_max)
-            s2, reward, done, info = env.step(s, b, c, p)
+            route = None
+            if env.multi_server:
+                route = jax.random.randint(keys[3], (n,), 0, env.n_servers)
+            s2, reward, done, info = env.step(s, _act(env, b, c, p, route))
             return s2, {"reward": reward, "completed": info["completed"]}
 
         _, out = jax.lax.scan(body, s, jax.random.split(key, frames))
@@ -66,3 +89,49 @@ def random_policy_eval(env: MECEnv, *, frames=64, seed=0):
 
     out = rollout(jax.random.PRNGKey(seed))
     return {k: float(np.asarray(v).mean()) for k, v in out.items()}
+
+
+# ------------------------------------------------------- fixed routing
+def _fixed_route_eval(env: MECEnv, route, *, d=50.0, active=None):
+    """Score greedy per-UE splits under a FIXED routing assignment: each
+    UE takes its best clean-channel (split) on its assigned server,
+    channels round-robin within each server, p_max — then everything is
+    evaluated jointly WITH interference and server sharing. `active`
+    (N,) bool: standby UEs of a dynamic fleet neither transmit nor enter
+    the means (same aggregation contract as greedy_eval)."""
+    from repro.rl.heuristics import (_clean_cost_table, _joint_overhead,
+                                     _round_robin_channels)
+    prm = env.params
+    n = prm.n_ue
+    beta = float(prm.beta)
+    act = np.ones((n,), bool) if active is None else np.asarray(active)
+    if not act.any():
+        raise ValueError("active mask selects no UE: nothing to score")
+    cost = _clean_cost_table(env, d)                  # (N, B+2, E)
+    b = [int(cost[ue, :, route[ue]].argmin()) for ue in range(n)]
+    c = _round_robin_channels(route, env.n_channels)
+    p = [float(prm.p_max)] * n
+    t, e = _joint_overhead(env, b, c, p, [d] * n, active=act, route=route)
+    return {"b": b, "route": list(route),
+            "t_task": float(t[act].mean()), "e_task": float(e[act].mean()),
+            "overhead": float((t + beta * e)[act].mean())}
+
+
+def nearest_server_eval(env: MECEnv, *, d=50.0, active=None):
+    """Routing-oblivious reference: every UE routes to the closest server
+    (min dist_scale) and offloads at its clean-channel-best split there."""
+    if not env.multi_server:
+        raise ValueError("nearest_server_eval needs a multi-server env")
+    e_near = int(np.argmin(np.asarray(env.params.server_dist)))
+    return _fixed_route_eval(env, [e_near] * env.params.n_ue, d=d,
+                             active=active)
+
+
+def load_aware_eval(env: MECEnv, *, d=50.0, active=None):
+    """Round-robin load balancing: UE i routes to server i mod E (equal
+    UE counts per server), splits re-optimized per assigned server."""
+    if not env.multi_server:
+        raise ValueError("load_aware_eval needs a multi-server env")
+    n = env.params.n_ue
+    return _fixed_route_eval(env, [i % env.n_servers for i in range(n)],
+                             d=d, active=active)

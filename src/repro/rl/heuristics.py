@@ -1,81 +1,145 @@
 """Non-RL scheduler baselines beyond the paper's Local/JALAD:
 
-* greedy: each UE independently picks argmin_b (t_b + beta * e_b) over ITS
-  OWN split table assuming a clean channel (no interference awareness) at
-  max power, round-robin channels — what a non-coordinating heuristic would
-  do. Heterogeneous fleets naturally get per-UE answers.
-* oracle_static: exhaustive search over joint (b, c) assignments (max-power)
-  for small N — the best *static* policy; the gap RL closes above it comes
-  from state-dependent scheduling. Each UE's b ranges over its own feasible
-  set (padded fleet actions are excluded).
+* greedy: each UE independently picks argmin over ITS OWN split table —
+  and, on a multi-server env, over (split, server) pairs — assuming a
+  clean channel (no interference awareness) at max power, round-robin
+  channels (per server) — what a non-coordinating heuristic would do.
+  Heterogeneous fleets naturally get per-UE answers.
+* oracle_static: exhaustive search over joint (b, c[, e]) assignments
+  (max-power) for small N — the best *static* policy; the gap RL closes
+  above it comes from state-dependent scheduling. Each UE's b ranges over
+  its own feasible set (padded fleet actions are excluded), and on an
+  edge pool every server is enumerated per UE.
+
+Simpler fixed-routing policies (nearest-server, load-aware round-robin)
+live in repro.rl.baselines.
 """
 from __future__ import annotations
 
 import itertools
 import math
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.env.channel import channel_gain, uplink_rates
 from repro.env.mecenv import MECEnv, per_ue
 
 
-def _joint_overhead(env: MECEnv, b, c, p, d, active=None):
+def _joint_overhead(env: MECEnv, b, c, p, d, active=None, route=None):
     """Expected per-task latency/energy for each UE under joint actions.
-    `active` (N,) bool: inactive UEs neither transmit nor interfere."""
+    `active` (N,) bool: inactive UEs neither transmit nor interfere.
+    `route` (N,) int: target server on a multi-server env (default 0)."""
     prm = env.params
-    g = channel_gain(jnp.asarray(d), prm.pathloss)
-    l_b = per_ue(prm.l_new, jnp.asarray(b))
-    n_b = per_ue(prm.n_new, jnp.asarray(b))
+    b = jnp.asarray(b)
+    l_b = per_ue(prm.l_new, b)
+    n_b = per_ue(prm.n_new, b)
     offl = n_b > 0
     if active is not None:
         offl = offl & jnp.asarray(active)
-    r = jnp.maximum(uplink_rates(jnp.asarray(p), jnp.asarray(c), g, offl,
-                                 omega=prm.omega, sigma=prm.sigma), 1.0)
+    e_route = None
+    if env.multi_server:
+        e_route = jnp.zeros_like(b) if route is None else \
+            jnp.asarray(route, jnp.int32)
+    r = env._rates(jnp.asarray(d), jnp.asarray(c), jnp.asarray(p), e_route,
+                   offl)
     t = l_b + n_b / r
+    if env.multi_server:
+        te_eff, _ = env._edge_seconds(b, e_route, offl)
+        t = t + te_eff
     e = l_b * prm.p_compute + (n_b / r) * jnp.asarray(p)
     return np.asarray(t), np.asarray(e)
 
 
+def clean_rate(env: MECEnv, d=50.0, server=None):
+    """Clean-channel rate of a lone UE at p_max on channel 0 (of `server`
+    on a multi-server env): the rate a non-coordinating heuristic plans
+    with."""
+    prm = env.params
+    if env.multi_server and server is None:
+        raise ValueError("multi-server env: pass the target server index")
+    pp = jnp.full((1,), prm.p_max)
+    cc = jnp.zeros((1,), jnp.int32)
+    tx = jnp.asarray([True])
+    if server is None:
+        r = env._rates(jnp.full((1,), d), cc, pp, None, tx)
+    else:
+        r = env._rates(jnp.full((1,), d), cc, pp,
+                       jnp.full((1,), server, jnp.int32), tx)
+    return float(r[0])
+
+
+def _clean_cost_table(env: MECEnv, d=50.0):
+    """(N, B+2) single-server — or (N, B+2, E) multi-server — per-task
+    cost t + beta*e of each (ue, split[, server]) cell under a clean
+    channel at p_max; infeasible cells are +inf."""
+    prm = env.params
+    beta = float(prm.beta)
+    feas = np.asarray(prm.feasible)
+    l_new = np.asarray(prm.l_new)
+    n_new = np.asarray(prm.n_new)
+    p_comp = np.asarray(prm.p_compute)[:, None]
+    p_max = float(prm.p_max)
+
+    def cell_cost(r, t_extra=0.0):
+        t = l_new + n_new / r + t_extra
+        e = l_new * p_comp + n_new / r * p_max
+        return np.where(feas, t + beta * e, np.inf)
+
+    if not env.multi_server:
+        return cell_cost(clean_rate(env, d))
+    te = np.asarray(prm.t_edge)                       # (N, B+2, E)
+    return np.stack([cell_cost(clean_rate(env, d, e), te[:, :, e])
+                     for e in range(env.n_servers)], axis=-1)
+
+
+def _round_robin_channels(route, n_channels):
+    """Round-robin channel assignment within each UE's target server."""
+    counts = {}
+    c = []
+    for e in route:
+        c.append(counts.get(e, 0) % n_channels)
+        counts[e] = counts.get(e, 0) + 1
+    return c
+
+
 def greedy_eval(env: MECEnv, *, d=50.0, active=None):
     """Interference-oblivious greedy (then evaluated WITH interference).
-    `active` (N,) bool restricts the report to a dynamic fleet's current
-    members; standby UEs are excluded from the means and don't interfere."""
+    On an edge pool each UE picks its best (split, server) pair — servers
+    scored by their clean-channel rate and (processor-sharing-free) edge
+    service time. `active` (N,) bool restricts the report to a dynamic
+    fleet's current members; standby UEs are excluded from the means and
+    don't interfere."""
     prm = env.params
     n = prm.n_ue
     beta = float(prm.beta)
     act = np.ones((n,), bool) if active is None else np.asarray(active)
     if not act.any():
         raise ValueError("active mask selects no UE: nothing to score")
-    feas = np.asarray(prm.feasible)                 # (N, B+2)
-    # clean-channel rate of a lone UE at p_max on channel 0: one value
-    # covers every (ue, b) cell, so score the whole table in one shot
-    g = channel_gain(jnp.full((1,), d), prm.pathloss)
-    r = float(jnp.maximum(uplink_rates(
-        jnp.full((1,), prm.p_max), jnp.zeros((1,), jnp.int32), g,
-        jnp.asarray([True]), omega=prm.omega, sigma=prm.sigma)[0], 1.0))
-    l_new = np.asarray(prm.l_new)
-    n_new = np.asarray(prm.n_new)
-    t = l_new + n_new / r
-    e = (l_new * np.asarray(prm.p_compute)[:, None]
-         + n_new / r * float(prm.p_max))
-    cost = np.where(feas, t + beta * e, np.inf)
-    b = [int(x) for x in np.argmin(cost, axis=1)]
-    c = [i % env.n_channels for i in range(n)]
+    cost = _clean_cost_table(env, d)
+    route = None
+    if env.multi_server:
+        flat = cost.reshape(n, -1).argmin(axis=1)     # over (b, e) pairs
+        b = [int(x) for x in flat // env.n_servers]
+        route = [int(x) for x in flat % env.n_servers]
+        c = _round_robin_channels(route, env.n_channels)
+    else:
+        b = [int(x) for x in np.argmin(cost, axis=1)]
+        c = [i % env.n_channels for i in range(n)]
     p = [float(prm.p_max)] * n
-    t, e = _joint_overhead(env, b, c, p, [d] * n, active=act)
-    return {"b": b, "t_task": float(t[act].mean()),
-            "e_task": float(e[act].mean()),
-            "overhead": float((t + beta * e)[act].mean())}
+    t, e = _joint_overhead(env, b, c, p, [d] * n, active=act, route=route)
+    out = {"b": b, "t_task": float(t[act].mean()),
+           "e_task": float(e[act].mean()),
+           "overhead": float((t + beta * e)[act].mean())}
+    if route is not None:
+        out["route"] = route
+    return out
 
 
 def oracle_static_eval(env: MECEnv, *, d=50.0, max_joint=300_000,
                        active=None):
-    """Exhaustive joint search over (b, c) per UE at p_max (small N only).
-    With `active`, standby UEs are pinned to full-local (inert) and only
-    active UEs are searched and scored."""
+    """Exhaustive joint search over (b, c[, e]) per UE at p_max (small N
+    only). With `active`, standby UEs are pinned to full-local (inert)
+    and only active UEs are searched and scored."""
     prm = env.params
     n = prm.n_ue
     beta = float(prm.beta)
@@ -87,22 +151,29 @@ def oracle_static_eval(env: MECEnv, *, d=50.0, max_joint=300_000,
     per_ue_feas = [list(np.where(feas_np[ue])[0]) if act[ue] else [b_local]
                    for ue in range(n)]
     n_c = env.n_channels
-    # inactive UEs don't transmit, so their channel choice is irrelevant:
-    # one combo per standby slot, not n_c
-    spaces = [len(f) * (n_c if act[ue] else 1)
+    n_e = env.n_servers
+    n_ce = n_c * n_e
+    # inactive UEs don't transmit, so their channel/server choice is
+    # irrelevant: one combo per standby slot, not n_c * n_e
+    spaces = [len(f) * (n_ce if act[ue] else 1)
               for ue, f in enumerate(per_ue_feas)]
     total = math.prod(spaces)                # exact Python int, no overflow
     if total > max_joint:
         raise ValueError(f"joint space too large: {spaces}")
     best = None
     for combo in itertools.product(*(range(sp) for sp in spaces)):
-        b = [per_ue_feas[ue][x // n_c if act[ue] else 0]
+        b = [per_ue_feas[ue][x // n_ce if act[ue] else 0]
              for ue, x in enumerate(combo)]
-        c = [x % n_c if act[ue] else 0 for ue, x in enumerate(combo)]
+        c = [(x % n_ce) // n_e if act[ue] else 0
+             for ue, x in enumerate(combo)]
+        e = [x % n_e if act[ue] else 0 for ue, x in enumerate(combo)]
         p = [float(prm.p_max)] * n
-        t, e = _joint_overhead(env, b, c, p, [d] * n, active=act)
-        cost = float((t + beta * e)[act].mean())
+        t, en = _joint_overhead(env, b, c, p, [d] * n, active=act,
+                                route=e if env.multi_server else None)
+        cost = float((t + beta * en)[act].mean())
         if best is None or cost < best["overhead"]:
             best = {"b": b, "c": c, "t_task": float(t[act].mean()),
-                    "e_task": float(e[act].mean()), "overhead": cost}
+                    "e_task": float(en[act].mean()), "overhead": cost}
+            if env.multi_server:
+                best["route"] = e
     return best

@@ -2,13 +2,18 @@
 global critic. Fully-jitted iteration: vectorized rollout (lax.scan over the
 horizon, vmap over parallel envs) + K-epoch minibatch updates.
 
+Generic over the env's HybridActionSpace: actions are a dict pytree
+({head: (..., N) array}) sampled/scored by ``env.action_space`` — no head
+is named here, so the single-server (split, channel, power) env and the
+multi-server (split, channel, route, power) env train through the same
+code path.
+
 Paper defaults: ||M||=1024, B=256, K reuse, gamma=0.95, lambda=0.95,
 eps=0.2, zeta=0.001, lr=1e-4.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable
 
 import jax
@@ -41,28 +46,28 @@ def init_agent(key, env: MECEnv):
     ka, kc = jax.random.split(key)
     actor_keys = jax.random.split(ka, n)
     actors = jax.vmap(lambda k: nets.init_actor(
-        k, env.obs_dim, env.n_actions_b, env.n_channels))(actor_keys)
+        k, env.obs_dim, env.action_space))(actor_keys)
     critic = nets.init_critic(kc, env.obs_dim)
     return {"actors": actors, "critic": critic}
 
 
-def _policy_all(actors, obs, mask):
-    """obs: (obs_dim,); mask: (N, n_b) per-actor feasibility ->
-    per-actor (N, ...) heads."""
-    return jax.vmap(lambda a, m: nets.actor_forward(a, obs, m))(actors, mask)
+def _policy_all(actors, space, obs, masks):
+    """obs: (obs_dim,); masks: {head: (N, n)} per-actor feasibility ->
+    per-head distribution stacks with a leading actor axis (N, ...)."""
+    return jax.vmap(lambda a, m: nets.actor_forward(a, space, obs, m),
+                    in_axes=(0, 0))(actors, masks)
 
 
-def _sample_all(keys, lb, lc, mu, ls, mask, mask_axis=None):
-    """keys/heads: (E, N, ...); mask: (N, n_b) shared across envs, or
-    (E, N, n_b) per-env when mask_axis=0 (dynamic fleets)."""
-    per_env = jax.vmap(nets.sample_hybrid)          # over UEs, mask (N, n_b)
-    return jax.vmap(per_env, in_axes=(0, 0, 0, 0, 0, mask_axis))(
-        keys, lb, lc, mu, ls, mask)
+def _sample_all(space, keys, dist, masks, mask_axis=None):
+    """keys/dist: (E, N, ...); masks: {head: (N, n)} shared across envs, or
+    (E, N, n) leaves when mask_axis=0 (dynamic fleets)."""
+    per_env = jax.vmap(space.sample)                # over UEs, masks (N, n)
+    return jax.vmap(per_env, in_axes=(0, 0, mask_axis))(keys, dist, masks)
 
 
 def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
-    mask = env.action_mask()                         # (N, n_b) per-UE
-    p_max = env.params.p_max
+    space = env.action_space
+    masks0 = env.action_masks()                     # {head: (N, n)} per-UE
     n_ue = env.params.n_ue
 
     def sample_step(agent, key, states):
@@ -70,24 +75,25 @@ def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
         obs = jax.vmap(env.observe)(states)                       # (E, D)
         active = states.active.astype(jnp.float32)                # (E, N)
         if env.dynamic:
-            # state-dependent mask: inactive actors are pinned to full-local
-            masks = jax.vmap(env.action_mask)(states)             # (E,N,n_b)
-            lb, lc, mu, ls = jax.vmap(
-                lambda o, m: _policy_all(agent["actors"], o, m))(obs, masks)
+            # state-dependent masks: inactive actors pinned to full-local
+            masks = jax.vmap(env.action_masks)(states)            # (E,N,n)
+            dist = jax.vmap(
+                lambda o, m: _policy_all(agent["actors"], space, o, m))(
+                    obs, masks)
         else:
-            masks = mask
-            lb, lc, mu, ls = jax.vmap(
-                lambda o: _policy_all(agent["actors"], o, mask))(obs)
+            masks = masks0
+            dist = jax.vmap(
+                lambda o: _policy_all(agent["actors"], space, o, masks0))(
+                    obs)
         keys = jax.random.split(key, obs.shape[0] * n_ue).reshape(
             obs.shape[0], n_ue, 2)
-        b, c, u = _sample_all(keys, lb, lc, mu, ls, masks,
+        actions = _sample_all(space, keys, dist, masks,
                               mask_axis=0 if env.dynamic else None)
-        logp = jax.vmap(jax.vmap(nets.log_prob_hybrid))(
-            lb, lc, mu, ls, b, c, u, active)
+        logp = jax.vmap(jax.vmap(space.log_prob))(dist, actions, active)
         value = jax.vmap(lambda o: nets.critic_forward(agent["critic"], o))(obs)
-        p_tx = nets.exec_power(u, p_max)
-        nstates, reward, done, info = jax.vmap(env.step)(states, b, c, p_tx)
-        tr = {"obs": obs, "b": b, "c": c, "u": u, "logp": logp,
+        phys = space.execute(actions)
+        nstates, reward, done, info = jax.vmap(env.step)(states, phys)
+        tr = {"obs": obs, "actions": actions, "logp": logp,
               "reward": reward, "done": done, "value": value,
               "active": active,
               "completed": info["completed"], "energy": info["energy"]}
@@ -109,18 +115,17 @@ def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
         return states, key, traj, last_v
 
     def loss_fn(agent, batch):
-        obs, b, c, u = batch["obs"], batch["b"], batch["c"], batch["u"]
+        obs, actions = batch["obs"], batch["actions"]
         adv, ret, logp_old = batch["adv"], batch["ret"], batch["logp"]
         act = batch["active"]                                     # (B, N)
-        lb, lc, mu, ls = jax.vmap(
-            lambda o: _policy_all(agent["actors"], o, mask))(obs)
-        logp = jax.vmap(jax.vmap(nets.log_prob_hybrid))(
-            lb, lc, mu, ls, b, c, u, act)
+        dist = jax.vmap(
+            lambda o: _policy_all(agent["actors"], space, o, masks0))(obs)
+        logp = jax.vmap(jax.vmap(space.log_prob))(dist, actions, act)
         ratio = jnp.exp(logp - logp_old)                          # (B, N)
         a = adv[:, None]
         surr = jnp.minimum(ratio * a,
                            jnp.clip(ratio, 1 - cfg.clip, 1 + cfg.clip) * a)
-        ent = jax.vmap(jax.vmap(nets.entropy_hybrid))(lb, lc, ls, act)
+        ent = jax.vmap(jax.vmap(space.entropy))(dist, act)
         # per-actor mean over the samples where that actor was ACTIVE: dead
         # agents contribute neither surrogate nor entropy, and a mostly-
         # inactive actor's few live samples aren't diluted by its dead ones
@@ -140,8 +145,8 @@ def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
         M = T * E
         flat = {
             "obs": traj["obs"].reshape(M, -1),
-            "b": traj["b"].reshape(M, n_ue), "c": traj["c"].reshape(M, n_ue),
-            "u": traj["u"].reshape(M, n_ue),
+            "actions": jax.tree_util.tree_map(
+                lambda x: x.reshape(M, n_ue), traj["actions"]),
             "logp": traj["logp"].reshape(M, n_ue),
             "active": traj["active"].reshape(M, n_ue),
             "adv": adv.reshape(M), "ret": ret.reshape(M)}
@@ -209,7 +214,7 @@ def evaluate_policy(env: MECEnv, agent, *, frames=64, seed=0,
     realized under the learned policy) plus cumulative reward. On dynamic
     fleets the per-task overhead is aggregated over ACTIVE UEs only —
     standby slots neither transmit nor weigh into t_task/e_task."""
-    p_max = env.params.p_max
+    space = env.action_space
     n_ue = env.params.n_ue
 
     @jax.jit
@@ -219,29 +224,17 @@ def evaluate_policy(env: MECEnv, agent, *, frames=64, seed=0,
         def body(carry, sub):
             s = carry
             obs = env.observe(s)
-            mask = env.action_mask(s)        # state-dependent when dynamic
-            lb, lc, mu, ls = _policy_all(agent["actors"], obs, mask)
+            masks = env.action_masks(s)      # state-dependent when dynamic
+            dist = _policy_all(agent["actors"], space, obs, masks)
             if deterministic:
-                b = jnp.argmax(jnp.where(mask, lb, -jnp.inf), -1)
-                c = jnp.argmax(lc, -1)
-                u = mu
+                actions = jax.vmap(space.mode)(dist, masks)
             else:
-                b, c, u = jax.vmap(nets.sample_hybrid)(
-                    jax.random.split(sub, n_ue), lb, lc, mu, ls, mask)
-            p_tx = nets.exec_power(u, p_max)
-            s2, reward, done, info = env.step(s, b, c, p_tx)
+                actions = jax.vmap(space.sample)(
+                    jax.random.split(sub, n_ue), dist, masks)
+            phys = space.execute(actions)
+            s2, reward, done, info = env.step(s, phys)
             # realized per-task overhead under this frame's interference
-            from repro.env.channel import channel_gain, uplink_rates
-            from repro.env.mecenv import per_ue
-            g = channel_gain(s.d, env.params.pathloss)
-            l_b = per_ue(env.params.l_new, b)
-            n_b = per_ue(env.params.n_new, b)
-            offl = (n_b > 0) & s.active
-            r = jnp.maximum(uplink_rates(p_tx, c, g, offl,
-                                         omega=env.params.omega,
-                                         sigma=env.params.sigma), 1.0)
-            t_task = l_b + n_b / r
-            e_task = l_b * env.params.p_compute + (n_b / r) * p_tx
+            t_task, e_task = env.task_overhead(s, phys)
             # completion-weighted per-task overhead: a UE finishing 18 fast
             # offloaded tasks counts 18x, one slow local task counts once.
             # Inactive UEs carry zero weight.

@@ -1,11 +1,14 @@
-"""Actor/critic networks (paper §5.1, Fig. 3).
+"""Actor/critic networks (paper §5.1, Fig. 3), generic over the env's
+:class:`~repro.rl.actionspace.HybridActionSpace`.
 
-Each UE has an actor: a shared trunk (256, 128) encoding the global state,
-and three output branches (64 units each) for the hybrid action:
-  * split point b   — categorical over B+2 (masked by feasibility)
-  * channel c       — categorical over C
-  * transmit power  — Gaussian (mu, sigma) over a pre-squash variable u;
-                      executed power = sigmoid(u) * p_max
+Each UE has an actor: a shared trunk (256, 128) encoding the global state
+and one output branch (64 units) per action-space head — a categorical
+branch per discrete head (masked by that actor's feasibility), a
+(mu, log_std) Gaussian branch per bounded continuous head. The heads are
+*data*: nets.py never names a specific decision; the paper's
+(split, channel, power) tuple and the multi-server (split, channel,
+route, power) tuple train through the identical code path.
+
 One global critic (256, 128, 64, 1) predicts the state value.
 """
 from __future__ import annotations
@@ -14,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-LOG_STD_MIN, LOG_STD_MAX = -3.0, 1.0
+from repro.rl.actionspace import HybridActionSpace
 
 
 def _linear_init(key, nin, nout, scale=np.sqrt(2.0)):
@@ -39,22 +42,21 @@ def _mlp(layers, x):
     return x
 
 
-def init_actor(key, obs_dim, n_b, n_c):
-    k1, k2, k3, k4 = jax.random.split(key, 4)
-    return {"trunk": _mlp_init(k1, (obs_dim, 256, 128), out_scale=np.sqrt(2.0)),
-            "head_b": _mlp_init(k2, (128, 64, n_b)),
-            "head_c": _mlp_init(k3, (128, 64, n_c)),
-            "head_p": _mlp_init(k4, (128, 64, 2))}
+def init_actor(key, obs_dim, space: HybridActionSpace):
+    """Trunk + one branch per head. Keys are consumed trunk-first then in
+    head declaration order, so the (split, channel, power) space
+    reproduces the pre-actionspace init stream exactly."""
+    ks = jax.random.split(key, 1 + len(space.heads))
+    return {"trunk": _mlp_init(ks[0], (obs_dim, 256, 128),
+                               out_scale=np.sqrt(2.0)),
+            "heads": space.init_heads(ks[1:], 128, _mlp_init)}
 
 
-def actor_forward(p, obs, mask):
-    """obs: (obs_dim,). Returns (logits_b, logits_c, mu, log_std)."""
+def actor_forward(p, space: HybridActionSpace, obs, masks=None):
+    """obs: (obs_dim,). Returns the per-head distribution dict (see
+    HybridActionSpace.forward); masks: {head: (n,)} for THIS actor."""
     h = jnp.tanh(_mlp(p["trunk"], obs))
-    logits_b = _mlp(p["head_b"], h) + jnp.where(mask, 0.0, -1e9)
-    logits_c = _mlp(p["head_c"], h)
-    mu, raw = jnp.split(_mlp(p["head_p"], h), 2, axis=-1)
-    log_std = jnp.clip(raw, LOG_STD_MIN, LOG_STD_MAX)
-    return logits_b, logits_c, mu[..., 0], log_std[..., 0]
+    return space.forward(p["heads"], h, _mlp, masks)
 
 
 def init_critic(key, obs_dim):
@@ -63,50 +65,3 @@ def init_critic(key, obs_dim):
 
 def critic_forward(p, obs):
     return _mlp(p, obs)[..., 0]
-
-
-def sample_hybrid(key, logits_b, logits_c, mu, log_std, mask=None):
-    """mask: optional (n_b,) bool feasibility for THIS actor. actor_forward
-    already buries infeasible logits at -1e9; re-masking here guarantees
-    padded/infeasible splits are never sampled even from raw logits."""
-    if mask is not None:
-        logits_b = jnp.where(mask, logits_b, -1e9)
-    kb, kc, kp = jax.random.split(key, 3)
-    b = jax.random.categorical(kb, logits_b)
-    c = jax.random.categorical(kc, logits_c)
-    u = mu + jnp.exp(log_std) * jax.random.normal(kp, mu.shape)
-    return b, c, u
-
-
-def log_prob_hybrid(logits_b, logits_c, mu, log_std, b, c, u, active=None):
-    """active: optional () / broadcastable activity weight for dynamic
-    fleets — an inactive actor contributes exactly zero log-prob, so its
-    (ignored-by-the-env) action can't steer the policy gradient."""
-    lb = jax.nn.log_softmax(logits_b)[..., b] if logits_b.ndim == 1 else \
-        jnp.take_along_axis(jax.nn.log_softmax(logits_b), b[..., None], -1)[..., 0]
-    lc = jax.nn.log_softmax(logits_c)[..., c] if logits_c.ndim == 1 else \
-        jnp.take_along_axis(jax.nn.log_softmax(logits_c), c[..., None], -1)[..., 0]
-    var = jnp.exp(2 * log_std)
-    lp = -0.5 * ((u - mu) ** 2 / var + 2 * log_std + jnp.log(2 * jnp.pi))
-    out = lb + lc + lp
-    if active is not None:
-        out = out * active
-    return out
-
-
-def entropy_hybrid(logits_b, logits_c, log_std, active=None):
-    """active: optional activity weight — inactive actors contribute zero
-    entropy (no bonus for dithering while off-fleet)."""
-    pb = jax.nn.softmax(logits_b)
-    pc = jax.nn.softmax(logits_c)
-    hb = -jnp.sum(pb * jnp.log(pb + 1e-12), axis=-1)
-    hc = -jnp.sum(pc * jnp.log(pc + 1e-12), axis=-1)
-    hp = 0.5 * jnp.log(2 * jnp.pi * jnp.e) + log_std
-    out = hb + hc + hp
-    if active is not None:
-        out = out * active
-    return out
-
-
-def exec_power(u, p_max):
-    return jax.nn.sigmoid(u) * p_max

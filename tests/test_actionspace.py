@@ -1,0 +1,157 @@
+"""HybridActionSpace unit tests: mask-respecting sampling, agreement of
+the generic sample/log_prob/entropy/init with the pre-redesign hard-coded
+(b, c, p) implementation (reproduced inline below), and bound handling on
+continuous heads."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.rl import nets
+from repro.rl.actionspace import (ContinuousHead, DiscreteHead,
+                                  HybridActionSpace)
+
+
+def _space(n_b=7, n_c=2, p_max=0.5):
+    return HybridActionSpace(
+        (DiscreteHead("split", n_b), DiscreteHead("channel", n_c)),
+        (ContinuousHead("power", 1e-4, p_max),))
+
+
+# ---- the PRE-redesign hybrid implementation, verbatim (2 discrete heads
+# + 1 Gaussian), as the reference the generic path must reproduce
+def _legacy_sample(key, lb, lc, mu, log_std, mask=None):
+    if mask is not None:
+        lb = jnp.where(mask, lb, -1e9)
+    kb, kc, kp = jax.random.split(key, 3)
+    b = jax.random.categorical(kb, lb)
+    c = jax.random.categorical(kc, lc)
+    u = mu + jnp.exp(log_std) * jax.random.normal(kp, mu.shape)
+    return b, c, u
+
+
+def _legacy_log_prob(lb, lc, mu, log_std, b, c, u):
+    var = jnp.exp(2 * log_std)
+    lp = -0.5 * ((u - mu) ** 2 / var + 2 * log_std + jnp.log(2 * jnp.pi))
+    return jax.nn.log_softmax(lb)[..., b] + jax.nn.log_softmax(lc)[..., c] \
+        + lp
+
+
+def _legacy_entropy(lb, lc, log_std):
+    pb, pc = jax.nn.softmax(lb), jax.nn.softmax(lc)
+    hb = -jnp.sum(pb * jnp.log(pb + 1e-12), axis=-1)
+    hc = -jnp.sum(pc * jnp.log(pc + 1e-12), axis=-1)
+    return hb + hc + 0.5 * jnp.log(2 * jnp.pi * jnp.e) + log_std
+
+
+def _rand_dist(key, space):
+    ks = jax.random.split(key, 4)
+    return {"split": jax.random.normal(ks[0], (space.head("split").n,)),
+            "channel": jax.random.normal(ks[1], (space.head("channel").n,)),
+            "power": {"mu": jax.random.normal(ks[2], ()),
+                      "log_std": jnp.clip(jax.random.normal(ks[3], ()),
+                                          -3.0, 1.0)}}
+
+
+def test_sample_matches_legacy_bitwise():
+    """Same keys, same draws: the generic sampler consumes the PRNG in
+    head-declaration order, exactly like the old kb/kc/kp split."""
+    space = _space()
+    mask = jnp.array([True, True, False, True, True, False, True])
+    for seed in range(50):
+        dist = _rand_dist(jax.random.PRNGKey(1000 + seed), space)
+        key = jax.random.PRNGKey(seed)
+        b0, c0, u0 = _legacy_sample(key, dist["split"], dist["channel"],
+                                    dist["power"]["mu"],
+                                    dist["power"]["log_std"], mask)
+        a = space.sample(key, dist, {"split": mask})
+        assert int(a["split"]) == int(b0)
+        assert int(a["channel"]) == int(c0)
+        assert np.asarray(a["power"]).tobytes() == np.asarray(u0).tobytes()
+        assert bool(mask[int(a["split"])])          # never an invalid draw
+
+
+def test_log_prob_entropy_match_legacy():
+    space = _space()
+    for seed in range(20):
+        dist = _rand_dist(jax.random.PRNGKey(seed), space)
+        a = space.sample(jax.random.PRNGKey(seed + 99), dist)
+        lp = space.log_prob(dist, a)
+        lp_ref = _legacy_log_prob(dist["split"], dist["channel"],
+                                  dist["power"]["mu"],
+                                  dist["power"]["log_std"],
+                                  a["split"], a["channel"], a["power"])
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(lp_ref),
+                                   rtol=1e-6)
+        en = space.entropy(dist)
+        en_ref = _legacy_entropy(dist["split"], dist["channel"],
+                                 dist["power"]["log_std"])
+        np.testing.assert_allclose(np.asarray(en), np.asarray(en_ref),
+                                   rtol=1e-6)
+
+
+def test_active_weight_zeroes_contribution():
+    space = _space()
+    dist = _rand_dist(jax.random.PRNGKey(0), space)
+    a = space.sample(jax.random.PRNGKey(1), dist)
+    assert float(space.log_prob(dist, a, active=0.0)) == 0.0
+    assert float(space.entropy(dist, active=0.0)) == 0.0
+    np.testing.assert_allclose(
+        float(space.log_prob(dist, a, active=1.0)),
+        float(space.log_prob(dist, a)))
+
+
+def test_extra_head_changes_nothing_for_others():
+    """Adding a head (the multi-server `route`) only appends its own
+    factor: per-head log-prob terms of the shared heads are unchanged."""
+    space2 = _space()
+    space3 = HybridActionSpace(
+        space2.discrete + (DiscreteHead("route", 3),), space2.continuous)
+    dist = _rand_dist(jax.random.PRNGKey(0), space2)
+    dist3 = dict(dist, route=jnp.array([0.3, -0.2, 0.1]))
+    a = space2.sample(jax.random.PRNGKey(5), dist)
+    a3 = dict(a, route=jnp.asarray(1))
+    delta = float(space3.log_prob(dist3, a3)) - float(space2.log_prob(dist, a))
+    np.testing.assert_allclose(
+        delta, float(jax.nn.log_softmax(dist3["route"])[1]), rtol=1e-6)
+    dh = float(space3.entropy(dist3)) - float(space2.entropy(dist))
+    p = jax.nn.softmax(dist3["route"])
+    np.testing.assert_allclose(dh, float(-(p * jnp.log(p + 1e-12)).sum()),
+                               rtol=1e-5)
+
+
+def test_mode_respects_mask():
+    space = _space()
+    dist = _rand_dist(jax.random.PRNGKey(3), space)
+    # make the globally-best split infeasible: mode must avoid it
+    best = int(jnp.argmax(dist["split"]))
+    mask = jnp.ones((space.head("split").n,), bool).at[best].set(False)
+    a = space.mode(dist, {"split": mask})
+    assert int(a["split"]) != best and bool(mask[int(a["split"])])
+    assert float(a["power"]) == float(dist["power"]["mu"])
+
+
+def test_init_heads_shapes_and_forward():
+    space = _space(n_b=6, n_c=3)
+    actor = nets.init_actor(jax.random.PRNGKey(0), 10, space)
+    assert set(actor["heads"]) == {"split", "channel", "power"}
+    assert actor["heads"]["split"][-1]["b"].shape == (6,)
+    assert actor["heads"]["channel"][-1]["b"].shape == (3,)
+    assert actor["heads"]["power"][-1]["b"].shape == (2,)
+    obs = jax.random.normal(jax.random.PRNGKey(1), (10,))
+    dist = nets.actor_forward(actor, space, obs)
+    assert dist["split"].shape == (6,)
+    assert dist["power"]["mu"].shape == ()
+    assert -3.0 <= float(dist["power"]["log_std"]) <= 1.0
+
+
+def test_space_validation():
+    with pytest.raises(ValueError, match="duplicate"):
+        HybridActionSpace((DiscreteHead("a", 2), DiscreteHead("a", 3)), ())
+    with pytest.raises(ValueError, match="non-discrete"):
+        HybridActionSpace((DiscreteHead("a", 2),),
+                          (ContinuousHead("p", 0.0, 1.0),),
+                          masks={"p": jnp.ones((1, 2), bool)})
+    sp = _space()
+    with pytest.raises(KeyError):
+        sp.head("nope")

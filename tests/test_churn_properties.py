@@ -48,7 +48,8 @@ def _ledger_rollout(env, seed, frames=200):
         b = jnp.asarray(rng.randint(0, env.n_actions_b, n), jnp.int32)
         c = jnp.asarray(rng.randint(0, env.n_channels, n), jnp.int32)
         p = jnp.asarray(rng.uniform(0.05, 0.5, n), jnp.float32)
-        s, r, done, info = env.step(s, b, c, p)
+        s, r, done, info = env.step(s, {"split": b, "channel": c,
+                                        "power": p})
         assert float(info["energy"]) >= 0.0
         assert float(info["completed"]) >= 0.0
         assert float(info["dropped"]) >= 0.0
@@ -93,7 +94,8 @@ def test_zero_churn_reduces_to_static_conservation():
         b = jnp.asarray(rng.randint(0, env.n_actions_b, n), jnp.int32)
         c = jnp.asarray(rng.randint(0, env.n_channels, n), jnp.int32)
         p = jnp.asarray(rng.uniform(0.05, 0.5, n), jnp.float32)
-        s, r, done, info = env.step(s, b, c, p)
+        s, r, done, info = env.step(s, {"split": b, "channel": c,
+                                        "power": p})
         assert float(info["spawned"]) == 0.0
         assert float(info["dropped"]) == 0.0
         completed += float(info["completed"])
@@ -129,8 +131,8 @@ def _inert_check(seed):
     b = jnp.asarray(rng.randint(0, env.n_actions_b - 1, n), jnp.int32)
     c = jnp.zeros((n,), jnp.int32)         # all on one channel: worst case
     p = jnp.full((n,), 0.5)
-    s2a, ra, da, ia = env.step(sa, b, c, p)
-    s2b, rb, db, ib = env.step(sb, b, c, p)
+    s2a, ra, da, ia = env.step(sa, {"split": b, "channel": c, "power": p})
+    s2b, rb, db, ib = env.step(sb, {"split": b, "channel": c, "power": p})
     assert np.asarray(ra).tobytes() == np.asarray(rb).tobytes()
     assert float(ia["energy"]) == float(ib["energy"])
     assert float(ia["completed"]) == float(ib["completed"])
@@ -180,8 +182,9 @@ def test_membership_mask_invariants():
     for i in range(300):
         act_pre = np.asarray(s.active)
         b = jnp.full((n,), 1, jnp.int32)
-        s, r, done, info = step(s, b, jnp.zeros((n,), jnp.int32),
-                                jnp.full((n,), 0.3))
+        s, r, done, info = step(s, {"split": b,
+                                    "channel": jnp.zeros((n,), jnp.int32),
+                                    "power": jnp.full((n,), 0.3)})
         act_post = np.asarray(s.active)
         if bool(done):
             assert act_post.all()          # fresh episode: full fleet

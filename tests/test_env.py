@@ -23,6 +23,21 @@ def env():
     return MECEnv(make_env_params(plan, n_ue=5, n_channels=2))
 
 
+def test_env_params_scalar_fields_are_jnp(env):
+    """EnvParams churn fields must match their annotated array types on
+    EVERY construction path: via make_env_params AND via a bare
+    EnvParams(...) that leaves the defaults in place."""
+    from repro.env.mecenv import EnvParams
+    for prm in (env.params,
+                EnvParams(*env.params[:len(EnvParams._fields) - 4])):
+        assert isinstance(prm.churn_rate, jnp.ndarray), type(prm.churn_rate)
+        assert isinstance(prm.leave_rate, jnp.ndarray), type(prm.leave_rate)
+        assert prm.churn_rate.dtype == jnp.float32
+    # _replace keeps them arrays too (the common tweak path in tests)
+    prm2 = env.params._replace(churn_rate=jnp.float32(0.1))
+    assert isinstance(prm2.churn_rate, jnp.ndarray)
+
+
 def test_reset_shapes(env):
     s = env.reset(jax.random.PRNGKey(0))
     assert s.k.shape == (5,)
@@ -61,7 +76,8 @@ if given is not None:
         bb = jnp.full((n,), b, jnp.int32)
         cc = jnp.full((n,), c, jnp.int32)
         pp = jnp.full((n,), p)
-        s2, reward, done, info = env.step(s, bb, cc, pp)
+        s2, reward, done, info = env.step(s, {"split": bb, "channel": cc,
+                                              "power": pp})
         # tasks never increase (unless auto-reset fired)
         if not bool(done):
             assert bool(jnp.all(s2.k <= s.k))
@@ -83,7 +99,8 @@ def test_local_policy_completes_all_tasks(env):
     total_completed = 0.0
     done_seen = False
     for _ in range(40):  # 200 tasks x 63ms / 0.5s ~ 26 frames
-        s, r, done, info = env.step(s, b, c, p)
+        s, r, done, info = env.step(s, {"split": b, "channel": c,
+                                        "power": p})
         total_completed += float(info["completed"])
         if bool(done):
             done_seen = True
@@ -99,11 +116,13 @@ def test_offload_faster_than_local_when_alone(env):
     env1 = MECEnv(make_env_params(plan, n_ue=1, n_channels=2))
     s = env1.reset(jax.random.PRNGKey(0), eval_mode=True)
     # split b=1 with decent power
-    s1, r_off, _, i_off = env1.step(s, jnp.array([1]), jnp.array([0]),
-                                    jnp.array([0.3]))
+    s1, r_off, _, i_off = env1.step(s, {"split": jnp.array([1]),
+                                        "channel": jnp.array([0]),
+                                        "power": jnp.array([0.3])})
     s = env1.reset(jax.random.PRNGKey(0), eval_mode=True)
-    s2, r_loc, _, i_loc = env1.step(s, jnp.array([env1.n_actions_b - 1]),
-                                    jnp.array([0]), jnp.array([0.3]))
+    s2, r_loc, _, i_loc = env1.step(
+        s, {"split": jnp.array([env1.n_actions_b - 1]),
+            "channel": jnp.array([0]), "power": jnp.array([0.3])})
     assert float(i_off["completed"]) > float(i_loc["completed"])
 
 
@@ -126,7 +145,8 @@ def test_theorem1_p2_ordering_implies_p1():
         c = jax.random.randint(kc, (3,), 0, 2)
         p = jax.random.uniform(kp, (3,), minval=0.05, maxval=0.5)
         for _ in range(200):
-            s, r, done, info = env.step(s, b, c, p)
+            s, r, done, info = env.step(s, {"split": b, "channel": c,
+                                            "power": p})
             f2 -= float(r)
             energy += float(info["energy"])
             frames += 1

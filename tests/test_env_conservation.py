@@ -28,7 +28,8 @@ def test_completed_tasks_conserved(seed):
         b = jnp.asarray(rng.randint(0, env.n_actions_b, 3), jnp.int32)
         c = jnp.asarray(rng.randint(0, env.n_channels, 3), jnp.int32)
         p = jnp.asarray(rng.uniform(0.05, 0.5, 3), jnp.float32)
-        s, r, done, info = env.step(s, b, c, p)
+        s, r, done, info = env.step(s, {"split": b, "channel": c,
+                                        "power": p})
         completed += float(info["completed"])
         if bool(done):
             break
@@ -56,7 +57,7 @@ def test_completed_tasks_conserved_hetero_fleet(seed):
     fleet = build_fleet([cnn, tf_small, cnn_iot],
                         [oh.JETSON_NANO, oh.PHONE_NPU, oh.IOT_SOC])
     env = MECEnv(make_env_params(fleet, n_channels=2, lam_tasks=20.0))
-    feas = np.asarray(env.action_mask())
+    feas = np.asarray(env.action_masks()["split"])
     valid = [np.where(feas[ue])[0] for ue in range(3)]
     key = jax.random.PRNGKey(seed)
     s = env.reset(key)
@@ -69,7 +70,8 @@ def test_completed_tasks_conserved_hetero_fleet(seed):
         b = jnp.asarray([rng.choice(v) for v in valid], jnp.int32)
         c = jnp.asarray(rng.randint(0, env.n_channels, 3), jnp.int32)
         p = jnp.asarray(rng.uniform(0.05, 0.5, 3), jnp.float32)
-        s, r, done, info = env.step(s, b, c, p)
+        s, r, done, info = env.step(s, {"split": b, "channel": c,
+                                        "power": p})
         if bool(done):
             per_ue_completed += k_before  # auto-reset wiped s.k
             break

@@ -1,6 +1,9 @@
 """Heterogeneous-fleet refactor invariants: a homogeneous fleet reproduces
 the seed single-plan env bit-for-bit, padded/infeasible actions are never
-sampled, and the fleet env stays fully jit/vmap-friendly."""
+sampled, and the fleet env stays fully jit/vmap-friendly. The golden
+trajectories at the bottom additionally pin the action-space/edge-pool
+redesign: a single-server EdgePool must be indistinguishable from no pool
+at all, PRNG stream included."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,10 +12,15 @@ import pytest
 from repro.configs import get_config
 from repro.core import overhead as oh
 from repro.core.cnn import make_resnet18
+from repro.core.fleets import single_server
 from repro.core.split import (build_fleet, cnn_split_table,
                               homogeneous_fleet, transformer_split_table)
 from repro.env.mecenv import MECEnv, make_env_params, per_ue
 from repro.rl import nets
+
+
+def _acts(b, c, p):
+    return {"split": b, "channel": c, "power": p}
 
 
 @pytest.fixture(scope="module")
@@ -41,8 +49,8 @@ def test_homogeneous_fleet_matches_seed_env_bit_for_bit():
         b = jnp.asarray(rng.randint(0, env_a.n_actions_b, 3), jnp.int32)
         c = jnp.asarray(rng.randint(0, env_a.n_channels, 3), jnp.int32)
         p = jnp.asarray(rng.uniform(0.05, 0.5, 3), jnp.float32)
-        sa, ra, da, _ = env_a.step(sa, b, c, p)
-        sb, rb, db, _ = env_b.step(sb, b, c, p)
+        sa, ra, da, _ = env_a.step(sa, _acts(b, c, p))
+        sb, rb, db, _ = env_b.step(sb, _acts(b, c, p))
         assert np.asarray(ra).tobytes() == np.asarray(rb).tobytes()
         np.testing.assert_array_equal(np.asarray(sa.k), np.asarray(sb.k))
         np.testing.assert_array_equal(np.asarray(sa.n), np.asarray(sb.n))
@@ -67,23 +75,22 @@ def test_fleet_padding_layout(mixed_fleet):
 
 def test_mask_per_ue_and_sampling_respects_it(mixed_fleet):
     env = MECEnv(make_env_params(mixed_fleet, n_channels=2))
-    mask = env.action_mask()
+    space = env.action_space
+    mask = env.action_masks()["split"]
     assert mask.shape == (3, env.n_actions_b)
-    actor = nets.init_actor(jax.random.PRNGKey(0), env.obs_dim,
-                            env.n_actions_b, env.n_channels)
+    actor = nets.init_actor(jax.random.PRNGKey(0), env.obs_dim, space)
     obs = env.observe(env.reset(jax.random.PRNGKey(1)))
     for ue in range(3):
-        lb, lc, mu, ls = nets.actor_forward(actor, obs, mask[ue])
+        m = {"split": mask[ue]}
+        dist = nets.actor_forward(actor, space, obs, m)
         for seed in range(200):
-            b, _, _ = nets.sample_hybrid(jax.random.PRNGKey(seed), lb, lc,
-                                         mu, ls, mask[ue])
-            assert bool(mask[ue, int(b)]), (ue, int(b))
-        # even from RAW (unmasked) logits, sample_hybrid's mask protects
-        raw = jnp.zeros_like(lb)
+            a = space.sample(jax.random.PRNGKey(seed), dist, m)
+            assert bool(mask[ue, int(a["split"])]), (ue, int(a["split"]))
+        # even from RAW (unmasked) logits, space.sample's mask protects
+        raw = dict(dist, split=jnp.zeros_like(dist["split"]))
         for seed in range(200):
-            b, _, _ = nets.sample_hybrid(jax.random.PRNGKey(seed), raw, lc,
-                                         mu, ls, mask[ue])
-            assert bool(mask[ue, int(b)]), (ue, int(b))
+            a = space.sample(jax.random.PRNGKey(seed), raw, m)
+            assert bool(mask[ue, int(a["split"])]), (ue, int(a["split"]))
 
 
 def test_padded_action_is_inert(mixed_fleet):
@@ -92,8 +99,8 @@ def test_padded_action_is_inert(mixed_fleet):
     env = MECEnv(make_env_params(mixed_fleet, n_channels=2))
     s = env.reset(jax.random.PRNGKey(0), eval_mode=True)
     b = jnp.asarray([5, 3, 5], jnp.int32)     # ue1 takes a padded slot
-    _, _, _, info = env.step(s, b, jnp.zeros((3,), jnp.int32),
-                             jnp.full((3,), 0.3))
+    _, _, _, info = env.step(s, _acts(b, jnp.zeros((3,), jnp.int32),
+                                      jnp.full((3,), 0.3)))
     l_b = per_ue(env.params.l_new, b)
     n_b = per_ue(env.params.n_new, b)
     assert float(l_b[1]) == 0.0 and float(n_b[1]) == 0.0
@@ -107,7 +114,7 @@ def test_fleet_env_jit_vmap(mixed_fleet):
     c = jnp.zeros((4, 3), jnp.int32)
     p = jnp.full((4, 3), 0.3)
     step = jax.jit(jax.vmap(env.step))
-    _, r, _, _ = step(states, b, c, p)
+    _, r, _, _ = step(states, _acts(b, c, p))
     assert r.shape == (4,)
     assert bool(jnp.all(jnp.isfinite(r)))
 
@@ -129,11 +136,13 @@ def test_mahppo_short_training_on_mixed_fleet(mixed_fleet):
     assert np.isfinite(float(metrics["reward_mean"]))
 
 
-# Golden trajectories captured from the PRE-churn static env (PR 1 HEAD):
+# Golden trajectories captured from the PRE-churn static env (PR 1 HEAD)
+# and, for "churn", from the PRE-actionspace dynamic env (PR 2 HEAD):
 # 40 frames of rewards + the final EnvState under a fixed seed/action
-# stream. Guards that (a) the static env itself and (b) the dynamic env
-# with churn_rate=leave_rate=0.0 are BIT-FOR-BIT the seed behavior —
-# including the PRNG key stream (key_hex below).
+# stream. Guards that (a) the static env itself, (b) the dynamic env
+# with churn_rate=leave_rate=0.0, and (c) BOTH through a single-server
+# EdgePool are BIT-FOR-BIT the seed behavior — including the PRNG key
+# stream (key hexes below).
 _GOLD = {
     "homo": {
         "rewards": "ed7b13beb7b8a4bd81b3eebd05e6a8bd5b8019bd48cb09be9ec33a"
@@ -144,6 +153,8 @@ _GOLD = {
                    "be7f91fdbdee0fd1bdda1fd9bd284bfdbd2ad8d8bd5a42f7bd",
         "k": "000040400000000000000000", "l": "def94e3d0000000000000000",
         "n": "000044470000000000000000",
+        "d": "54d26642cad9e3416aabea41", "key": "04aeb16524c70b97",
+        "active": "010101",
     },
     "mixed": {
         "rewards": "ecec87be79c742bfd09e39bf9c0d1ebe4babb4bf800261bff286c7"
@@ -154,10 +165,23 @@ _GOLD = {
                    "bd083a2cbf1a2e2fbf10c529bff7e12fbfc52030bfbc942fbf",
         "k": "000000000000000000001643", "l": "0000000000000000d07d853d",
         "n": "00000000000000000000c447",
+        "d": "54d26642cad9e3416aabea41", "key": "04aeb16524c70b97",
+        "active": "010101",
+    },
+    # homogeneous plan with churn_rate=0.4, leave_rate=0.2, lam_tasks=30
+    "churn": {
+        "rewards": "ed7b13beb7b8a4bd96c715bfa64296bd1464a3bd19989fbd9ab80d"
+                   "bed09fa5bdce4dcabdd82d9cbdc4cb92bdfb533cbe6c098ebe24a9"
+                   "c6bd8b7bc0bd81278fbd70b5a2bd5394a8bdd4d67fbd37004cbee8"
+                   "f531bde0e6cebd4459b9bdb5a4ddbd14accfbd1c71dcbd3a5f97bd"
+                   "a777a6be61fa12be362459bdb95511bec402c8bda23609beb07042"
+                   "bef4be3fbf4293cabda0988bbd4efff5bdf319f1bd663e12be",
+        "k": "000000000000000000008041", "l": "000000000000000000000000",
+        "n": "000000000000000030af2746",
+        "d": "0d0253422049a441fe1e9842", "key": "c1ee0d7e351a63cb",
+        "active": "000101",
     },
 }
-_GOLD_D = "54d26642cad9e3416aabea41"
-_GOLD_KEY = "04aeb16524c70b97"
 
 
 def _golden_rollout(env, n_ue=3, seed=3, steps=40):
@@ -170,33 +194,60 @@ def _golden_rollout(env, n_ue=3, seed=3, steps=40):
         b = jnp.asarray([rng.choice(v) for v in valid], jnp.int32)
         c = jnp.asarray(rng.randint(0, env.n_channels, n_ue), jnp.int32)
         p = jnp.asarray(rng.uniform(0.05, 0.5, n_ue), jnp.float32)
-        s, r, d, _ = env.step(s, b, c, p)
+        s, r, d, _ = env.step(s, _acts(b, c, p))
         rewards.append(np.float32(r))
     return np.asarray(rewards, np.float32), s
 
 
+def _golden_check(env, g, name):
+    rewards, s = _golden_rollout(env)
+    assert rewards.tobytes().hex() == g["rewards"], name
+    for field in ("k", "l", "n", "d"):
+        got = np.asarray(getattr(s, field), np.float32).tobytes().hex()
+        assert got == g[field], (name, field)
+    assert np.asarray(s.key, np.uint32).tobytes().hex() == g["key"], name
+    got_act = np.asarray(s.active, np.uint8).tobytes().hex()
+    assert got_act == g["active"], name
+
+
+@pytest.mark.parametrize("pool_kwargs", [
+    {},                                         # no pool argument at all
+    {"pool": None},
+    {"pool": "single"},                         # 1-server EdgePool
+], ids=["default", "none", "edgepool1"])
 @pytest.mark.parametrize("churn_kwargs", [
     {},                                         # the static entry point
     {"churn_rate": 0.0, "leave_rate": 0.0},     # zero-churn dynamic request
 ], ids=["static", "zero_churn"])
-def test_env_matches_prechurn_golden(mixed_fleet, churn_kwargs):
+def test_env_matches_prechurn_golden(mixed_fleet, churn_kwargs, pool_kwargs):
+    kw = dict(churn_kwargs)
+    if pool_kwargs:
+        kw["pool"] = single_server() if pool_kwargs["pool"] == "single" \
+            else None
     plan = cnn_split_table(make_resnet18(101), 224)
     for name, env in [
             ("homo", MECEnv(make_env_params(plan, n_ue=3, n_channels=2,
-                                            **churn_kwargs))),
+                                            **kw))),
             ("mixed", MECEnv(make_env_params(mixed_fleet, n_channels=2,
-                                             **churn_kwargs)))]:
+                                             **kw)))]:
         assert not env.dynamic          # both rates 0.0 => static machinery
+        assert not env.multi_server     # one paper server => no routing
+        assert env.action_space.names == ("split", "channel", "power")
         assert env.obs_dim == 4 * env.params.n_ue
-        rewards, s = _golden_rollout(env)
-        g = _GOLD[name]
-        assert rewards.tobytes().hex() == g["rewards"], name
-        for field in ("k", "l", "n"):
-            got = np.asarray(getattr(s, field), np.float32).tobytes().hex()
-            assert got == g[field], (name, field)
-        assert np.asarray(s.d, np.float32).tobytes().hex() == _GOLD_D
-        assert np.asarray(s.key, np.uint32).tobytes().hex() == _GOLD_KEY
-        assert bool(s.active.all())
+        _golden_check(env, _GOLD[name], name)
+
+
+@pytest.mark.parametrize("pool", [None, "single"], ids=["none", "edgepool1"])
+def test_churn_env_matches_preactionspace_golden(pool):
+    """The dynamic env through the actions-dict API (and through a
+    1-server EdgePool) reproduces the PR-2 churn trajectories bit-for-bit,
+    PRNG stream and final membership mask included."""
+    plan = cnn_split_table(make_resnet18(101), 224)
+    env = MECEnv(make_env_params(
+        plan, n_ue=3, n_channels=2, churn_rate=0.4, leave_rate=0.2,
+        lam_tasks=30.0, pool=single_server() if pool else None))
+    assert env.dynamic and not env.multi_server
+    _golden_check(env, _GOLD["churn"], "churn")
 
 
 def test_split_plan_invariants_enforced():

@@ -36,30 +36,49 @@ def test_gae_matches_naive():
                                rtol=1e-5, atol=1e-5)
 
 
+def _paper_space(n_b=5, n_c=2, p_max=0.5):
+    from repro.rl.actionspace import (ContinuousHead, DiscreteHead,
+                                      HybridActionSpace)
+    return HybridActionSpace(
+        (DiscreteHead("split", n_b), DiscreteHead("channel", n_c)),
+        (ContinuousHead("power", 1e-4, p_max),))
+
+
 def test_hybrid_logprob_consistent_with_sampling():
     """Monte-Carlo: average exp(logp) over categorical support sums to 1."""
     key = jax.random.PRNGKey(0)
-    a = nets.init_actor(key, 8, 5, 2)
+    space = _paper_space()
+    a = nets.init_actor(key, 8, space)
     obs = jax.random.normal(jax.random.PRNGKey(1), (8,))
-    mask = jnp.array([True, True, False, True, True])
-    lb, lc, mu, ls = nets.actor_forward(a, obs, mask)
+    masks = {"split": jnp.array([True, True, False, True, True])}
+    dist = nets.actor_forward(a, space, obs, masks)
     # masked action has ~zero probability
-    pb = jax.nn.softmax(lb)
+    pb = jax.nn.softmax(dist["split"])
     assert float(pb[2]) < 1e-6
     assert np.isclose(float(pb.sum()), 1.0, atol=1e-5)
-    # log-prob factorizes
-    b, c, u = nets.sample_hybrid(jax.random.PRNGKey(2), lb, lc, mu, ls)
-    lp = nets.log_prob_hybrid(lb, lc, mu, ls, b, c, u)
-    lp_manual = (jax.nn.log_softmax(lb)[b] + jax.nn.log_softmax(lc)[c]
-                 - 0.5 * ((u - mu) ** 2 / jnp.exp(2 * ls) + 2 * ls
-                          + jnp.log(2 * jnp.pi)))
+    # log-prob factorizes over heads
+    act = space.sample(jax.random.PRNGKey(2), dist)
+    lp = space.log_prob(dist, act)
+    mu, ls = dist["power"]["mu"], dist["power"]["log_std"]
+    lp_manual = (jax.nn.log_softmax(dist["split"])[act["split"]]
+                 + jax.nn.log_softmax(dist["channel"])[act["channel"]]
+                 - 0.5 * ((act["power"] - mu) ** 2 / jnp.exp(2 * ls)
+                          + 2 * ls + jnp.log(2 * jnp.pi)))
     assert np.isclose(float(lp), float(lp_manual), atol=1e-5)
 
 
-def test_exec_power_in_range():
+def test_power_head_bounds_in_one_place():
+    """The continuous head owns its bounds: execute() squashes into
+    (0, p_max] and clip() clamps arbitrary physical values into
+    [low, high] — the paths the policy and hand-written baselines share."""
+    space = _paper_space()
     u = jnp.linspace(-10, 10, 50)
-    p = nets.exec_power(u, 0.5)
+    p = space.execute({"split": 0, "channel": 0, "power": u})["power"]
     assert bool(jnp.all(p > 0)) and bool(jnp.all(p <= 0.5))
+    raw = jnp.array([-1.0, 0.0, 0.2, 9.0])
+    clipped = space.clip({"split": 0, "channel": 0, "power": raw})["power"]
+    assert bool(jnp.all(clipped >= 1e-4)) and bool(jnp.all(clipped <= 0.5))
+    np.testing.assert_allclose(np.asarray(clipped)[2], 0.2)
 
 
 def test_update_clamps_batch_to_population():
@@ -93,13 +112,14 @@ def test_evaluate_policy_completion_weighted_math():
                                  lam_tasks=500.0))   # queue never drains
     b_star, c_star, u_star = 1, 0, 0.7
     actor = nets.init_actor(jax.random.PRNGKey(0), env.obs_dim,
-                            env.n_actions_b, env.n_channels)
+                            env.action_space)
     actor = jax.tree_util.tree_map(jnp.zeros_like, actor)
     # zeroed trunk => h = 0 => heads output exactly their final bias
-    actor["head_b"][-1]["b"] = jnp.zeros(
+    actor["heads"]["split"][-1]["b"] = jnp.zeros(
         (env.n_actions_b,)).at[b_star].set(5.0)
-    actor["head_c"][-1]["b"] = jnp.zeros((env.n_channels,)).at[c_star].set(5.0)
-    actor["head_p"][-1]["b"] = jnp.array([u_star, -1.0])
+    actor["heads"]["channel"][-1]["b"] = jnp.zeros(
+        (env.n_channels,)).at[c_star].set(5.0)
+    actor["heads"]["power"][-1]["b"] = jnp.array([u_star, -1.0])
     agent = {"actors": jax.tree_util.tree_map(lambda x: x[None], actor)}
 
     res = evaluate_policy(env, agent, frames=4)
