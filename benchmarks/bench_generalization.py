@@ -1,0 +1,168 @@
+"""Fleet-generalist shared policy: train ONCE at N=4, deploy everywhere.
+
+A weight-shared MAHPPO actor (``MAHPPOConfig(shared_policy=True)``) is
+trained on the mixed 4-UE fleet over the 2-server demo pool, then
+evaluated ZERO-SHOT — no retraining, the identical parameter set — on:
+
+* an 8-UE and a 16-UE fleet of the same device mix (the per-UE feature
+  rows are N-independent, so the actor just sees more rows), and
+* a different 2-server pool LAYOUT (the v5e still primary but
+  bandwidth-starved, the GPU tier moved in much closer),
+
+each against the interference-oblivious greedy heuristic scored on that
+same scenario, plus per-UE actors trained from scratch at N=4 as the
+paper-style reference. Param counts are reported at N=4/8/16: the shared
+actor is O(1) in the fleet size where per-UE actors grow linearly — the
+scaling property the north-star "millions of users" needs.
+
+Expected picture: fleet-SIZE transfer wins (the mean-field aggregates the
+policy conditions on vary during training, so it has learned to respond
+to them), while pool-LAYOUT transfer is a stress probe reported honestly
+— the pool features are constant under single-pool training, so the
+policy gets no gradient signal to condition its route head on them and
+generally cannot beat a layout-aware heuristic zero-shot. Closing that
+gap needs pool randomization during training or per-server route
+encoders (see the ROADMAP PR-4 follow-ups); the scenario is here so the
+number is tracked rather than assumed.
+
+Parity guard: the jitted shared-policy iteration must cost no more than
+the per-UE-actors iteration at N=4 (limit 1.0x — one small actor applied
+N times does strictly less optimizer work than N actors).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core import overhead as oh
+from repro.core.fleets import EdgePool, make_edge_pool, make_mixed_fleet
+from repro.env.mecenv import MECEnv, make_env_params
+from repro.rl import nets
+from repro.rl.heuristics import greedy_eval
+from repro.rl.mahppo import (MAHPPOConfig, evaluate_policy, init_agent,
+                             train_mahppo)
+
+import jax
+
+PARITY_LIMIT = 1.0
+# wall-clock ratios on shared CI runners are noisy; the smoke gate only
+# guards gross regressions
+PARITY_LIMIT_SMOKE = 1.3
+TRAIN_N = 4
+EVAL_NS = (8, 16)
+
+
+def alt_pool() -> EdgePool:
+    """A different 2-server layout, same E (the route head's width must
+    match): the v5e keeps the primary slot but loses 40% of its uplink
+    bandwidth, and the GPU tier moves in to 1.2x path-loss distance (from
+    1.4x) — the relative attractiveness of the two routes flips without
+    renumbering which slot is the near/primary server."""
+    return EdgePool((oh.ServerProfile("tpu-v5e", oh.TPU_V5E, 1.0, 0.6,
+                                      0.0),
+                     oh.ServerProfile.from_device(oh.EDGE_GPU,
+                                                  dist_scale=1.2)))
+
+
+def make_gen_env(n_ue: int, pool: EdgePool = None) -> MECEnv:
+    fleet = make_mixed_fleet(n_ue=n_ue)
+    return MECEnv(make_env_params(fleet, n_channels=2,
+                                  pool=pool or make_edge_pool(2)))
+
+
+def _overhead(env, ev):
+    return ev["t_task"] + float(env.params.beta) * ev["e_task"]
+
+
+def run(quick=True, smoke=False):
+    iters = 3 if smoke else (30 if quick else 100)
+    env4 = make_gen_env(TRAIN_N)
+
+    cfg = MAHPPOConfig(iterations=iters, horizon=512, n_envs=4, reuse=4,
+                       shared_policy=True)
+    t0 = time.time()
+    shared, _ = train_mahppo(env4, cfg, seed=0)
+    train_s = time.time() - t0
+    per_ue, _ = train_mahppo(
+        env4, dataclasses.replace(cfg, shared_policy=False), seed=0)
+
+    scenarios = [("n4_train", env4),
+                 ("n8_zero_shot", make_gen_env(EVAL_NS[0])),
+                 ("n16_zero_shot", make_gen_env(EVAL_NS[1])),
+                 ("alt_pool_zero_shot", make_gen_env(TRAIN_N, alt_pool()))]
+    rows = []
+    for name, env in scenarios:
+        ev = evaluate_policy(env, shared, frames=64)
+        gr = greedy_eval(env)
+        row = {"scenario": name, "n_ue": int(env.params.n_ue),
+               "shared_overhead": _overhead(env, ev),
+               "shared_t_task": ev["t_task"], "shared_e_task": ev["e_task"],
+               "greedy_overhead": gr["overhead"],
+               "beats_greedy": bool(_overhead(env, ev) <= gr["overhead"])}
+        if name == "n4_train":
+            evp = evaluate_policy(env, per_ue, frames=64)
+            row["per_ue_overhead"] = _overhead(env, evp)
+        rows.append(row)
+
+    # parameter scaling: shared is O(1) in N, per-UE actors are O(N)
+    params = {"shared": nets.param_count(shared["actor"]), "per_ue": {}}
+    for name, env in scenarios[:3]:
+        pu = init_agent(jax.random.PRNGKey(0), env)
+        params["per_ue"][int(env.params.n_ue)] = \
+            nets.param_count(pu["actors"])
+
+    # hot-path parity: shared vs per-UE-actors jitted iteration at N=4.
+    # Wall-clock on a shared box is noisy, so each mode reports its
+    # best-of-k single-iteration time (one compilation per mode).
+    try:
+        from benchmarks.bench_hetero_fleet import _iter_us
+    except ImportError:        # run directly as a script
+        from bench_hetero_fleet import _iter_us
+    tcfg = MAHPPOConfig(horizon=512, n_envs=4, reuse=2)
+    scfg = dataclasses.replace(tcfg, shared_policy=True)
+    us_per_ue = _iter_us(env4, tcfg, n_timed=10, reduce="min")
+    us_shared = _iter_us(env4, scfg, n_timed=10, reduce="min")
+    ratio = us_shared / max(us_per_ue, 1e-9)
+    limit = PARITY_LIMIT_SMOKE if smoke else PARITY_LIMIT
+
+    # the acceptance gate is fleet-SIZE transfer (n8/n16); the alt-pool
+    # probe is reported but not gated (see module docstring). The gate is
+    # ENFORCED through the same ledger as the parity guard — a zero-shot
+    # regression must fail the run, not scroll past as a False — phrased
+    # as a ratio so the harness treats it uniformly: shared/greedy ≤ 1.0.
+    gates = [{"name": f"{r['scenario']}_vs_greedy",
+              "ratio": r["shared_overhead"] / max(r["greedy_overhead"],
+                                                  1e-9),
+              "limit": 1.0}
+             for r in rows if r["scenario"].startswith("n")
+             and r["scenario"].endswith("_zero_shot")]
+    zero_shot_ok = all(g["ratio"] <= g["limit"] for g in gates)
+    # "sublinear in N": deploying at 4x the fleet size leaves the shared
+    # actor's size unchanged while per-UE actors grow 4x
+    per_ue_counts = [params["per_ue"][n] for n in (TRAIN_N,) + EVAL_NS]
+    return {"rows": rows, "train_s": train_s, "params": params,
+            "param_sublinear": bool(
+                params["shared"] < per_ue_counts[0]
+                and per_ue_counts[0] < per_ue_counts[1] < per_ue_counts[2]),
+            "zero_shot_beats_greedy": zero_shot_ok,
+            "iter_us_per_ue": us_per_ue, "iter_us_shared": us_shared,
+            "iter_ratio": ratio,
+            "parity": [{"name": "shared_vs_per_ue_iteration",
+                        "ratio": ratio, "limit": limit}] + gates}
+
+
+if __name__ == "__main__":
+    out = run()
+    for r in out["rows"]:
+        extra = f" per_ue={r['per_ue_overhead']:.4f}" \
+            if "per_ue_overhead" in r else ""
+        print(f"{r['scenario']:>20s} (N={r['n_ue']:2d}): "
+              f"shared {r['shared_overhead']:.4f} vs greedy "
+              f"{r['greedy_overhead']:.4f}"
+              f" [{'BEATS' if r['beats_greedy'] else 'LOSES'}]{extra}")
+    p = out["params"]
+    print(f"actor params: shared {p['shared']} (constant in N); per-UE "
+          + ", ".join(f"N={n}: {c}" for n, c in sorted(p["per_ue"].items())))
+    print(f"iteration: per-UE {out['iter_us_per_ue']/1e3:.1f} ms, shared "
+          f"{out['iter_us_shared']/1e3:.1f} ms "
+          f"(ratio {out['iter_ratio']:.2f}, limit {PARITY_LIMIT})")

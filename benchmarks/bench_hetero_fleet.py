@@ -22,17 +22,30 @@ from repro.rl.mahppo import (MAHPPOConfig, evaluate_policy, init_agent,
                              make_train_fns, train_mahppo)
 
 
-def _iter_us(env, cfg, n_timed=3):
+def _iter_us(env, cfg, n_timed=3, reduce="mean"):
     """Steady-state wall time of ONE jitted MAHPPO iteration: reuse the same
-    compiled `iteration` for warm-up and timing so compilation is excluded."""
+    compiled `iteration` for warm-up and timing so compilation is excluded.
+    Honors cfg.shared_policy, so per-UE-actors and weight-shared agents
+    time through the identical harness. ``reduce="min"`` times each
+    iteration separately and reports the best — the noise-robust estimator
+    for a deterministic workload on a shared box, without paying a second
+    compilation the way repeating the whole call would."""
     from repro.optim import adamw_init
     key = jax.random.PRNGKey(0)
-    agent = init_agent(key, env)
+    agent = init_agent(key, env, shared_policy=cfg.shared_policy)
     opt = adamw_init(agent)
     states = jax.vmap(env.reset)(jax.random.split(key, cfg.n_envs))
     iteration = make_train_fns(env, cfg)
     agent, opt, key, states, m = iteration(agent, opt, key, states)
     jax.block_until_ready(m)                # compile + first run
+    if reduce == "min":
+        best = float("inf")
+        for _ in range(n_timed):
+            t0 = time.time()
+            agent, opt, key, states, m = iteration(agent, opt, key, states)
+            jax.block_until_ready(m)
+            best = min(best, time.time() - t0)
+        return best * 1e6
     t0 = time.time()
     for _ in range(n_timed):
         agent, opt, key, states, m = iteration(agent, opt, key, states)

@@ -4,11 +4,12 @@ the roofline analysis. Prints ``name,us_per_call,derived`` CSV.
   PYTHONPATH=src python -m benchmarks.run [--full|--smoke] [--only SECTION]
 
 Sections that guard a jitted-iteration parity ratio (hetero, churn,
-multi_server) report it into a shared ledger; any ratio above its limit
-makes the run EXIT NONZERO with a summary line, so CI catches hot-path
-regressions instead of scrolling past them. ``--smoke`` runs the RL
-sections at tiny iteration counts (CI-sized) and still emits the
-standardized ``artifacts/BENCH_multi_server.json`` artifact.
+multi_server, generalization) report it into a shared ledger; any ratio
+above its limit makes the run EXIT NONZERO with a summary line, so CI
+catches hot-path regressions instead of scrolling past them. ``--smoke``
+runs the RL sections at tiny iteration counts (CI-sized) and still emits
+the standardized ``artifacts/BENCH_multi_server.json`` and
+``artifacts/BENCH_generalization.json`` artifacts.
 """
 from __future__ import annotations
 
@@ -210,6 +211,47 @@ def main() -> None:
         with open("artifacts/BENCH_multi_server.json", "w") as f:
             json.dump(artifact, f, indent=1, default=float)
         print("# wrote artifacts/BENCH_multi_server.json", flush=True)
+
+    if want("generalization"):
+        _section("fleet-generalist shared policy (zero-shot N / pool "
+                 "transfer)")
+        from benchmarks import bench_generalization
+        out = bench_generalization.run(quick=quick, smoke=smoke)
+        results["generalization"] = out
+        for r in out["rows"]:
+            _emit(f"generalization_{r['scenario']}", 0.0,
+                  f"n_ue={r['n_ue']};"
+                  f"shared={r['shared_overhead']:.4f};"
+                  f"greedy={r['greedy_overhead']:.4f};"
+                  f"beats_greedy={r['beats_greedy']}"
+                  + (f";per_ue={r['per_ue_overhead']:.4f}"
+                     if "per_ue_overhead" in r else ""))
+        p = out["params"]
+        _emit("generalization_params", 0.0,
+              f"shared={p['shared']};"
+              + ";".join(f"per_ue_n{n}={c}"
+                         for n, c in sorted(p["per_ue"].items()))
+              + f";sublinear={out['param_sublinear']}")
+        _emit("generalization_iter_us", out["iter_us_shared"],
+              f"per_ue_us={out['iter_us_per_ue']:.0f};"
+              f"ratio={out['iter_ratio']:.2f};"
+              f"zero_shot_beats_greedy={out['zero_shot_beats_greedy']}")
+        for pc in out["parity"]:
+            guard("generalization", pc["name"], pc["ratio"], pc["limit"])
+        os.makedirs("artifacts", exist_ok=True)
+        artifact = {"bench": "generalization", "schema": 1,
+                    "smoke": smoke, "quick": quick,
+                    "rows": out["rows"], "params": out["params"],
+                    "param_sublinear": out["param_sublinear"],
+                    "zero_shot_beats_greedy":
+                        out["zero_shot_beats_greedy"],
+                    "iter_us_per_ue": out["iter_us_per_ue"],
+                    "iter_us_shared": out["iter_us_shared"],
+                    "iter_ratio": out["iter_ratio"],
+                    "parity": out["parity"]}
+        with open("artifacts/BENCH_generalization.json", "w") as f:
+            json.dump(artifact, f, indent=1, default=float)
+        print("# wrote artifacts/BENCH_generalization.json", flush=True)
 
     if want("archs"):
         _section("fig13 other backbones (+ assigned archs)")

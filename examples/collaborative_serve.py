@@ -23,6 +23,16 @@ server) decision plus the fleet's load distribution vs the
 nearest-server baseline:
 
   PYTHONPATH=src python examples/collaborative_serve.py --servers 2
+
+With ``--shared-policy`` the N per-UE actors are replaced by ONE
+weight-shared actor applied to every UE's featurized observation row
+(``env.observe_per_ue``) — O(1) parameters in the fleet size, and the
+trained agent evaluates zero-shot on other fleet sizes and pool layouts
+(see ``benchmarks/bench_generalization.py``). Composes with --churn and
+--servers:
+
+  PYTHONPATH=src python examples/collaborative_serve.py --shared-policy \\
+      --servers 2
 """
 import argparse
 
@@ -78,15 +88,19 @@ def run_split_forward(params, cfg, tokens, split_layer, ae, bits=8):
 
 
 def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
-                   leave_rate=0.0, n_servers=1):
+                   leave_rate=0.0, n_servers=1, shared_policy=False):
     """Mixed-fleet scheduling: per-UE split tables + device tiers end-to-end
     through MAHPPO, vs the non-coordinating greedy heuristic. With nonzero
     churn/leave rates the fleet is DYNAMIC: UEs join from a standby pool and
     drop mid-episode, and the policy schedules whoever is present. With
     n_servers > 1 the edge side is an EdgePool and routing is part of the
-    learned action."""
+    learned action. With shared_policy, ONE weight-shared actor over per-UE
+    feature rows (`env.observe_per_ue`) replaces the N per-UE actors —
+    O(1) parameters in the fleet size, and the trained agent transfers
+    zero-shot to other fleet sizes (see benchmarks/bench_generalization.py)."""
     from repro.core.fleets import make_edge_pool, make_mixed_fleet
     from repro.env.mecenv import MECEnv, make_env_params
+    from repro.rl import nets
     from repro.rl.heuristics import greedy_eval
     from repro.rl.mahppo import MAHPPOConfig, evaluate_policy, train_mahppo
 
@@ -135,8 +149,11 @@ def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
         for t, row in enumerate(trace):
             if t % 4 == 0:
                 print(f"    frame {t:2d}: {row}")
-    print(f"\ntraining MAHPPO on the mixed fleet ({iterations} iterations)...")
-    cfg = MAHPPOConfig(iterations=iterations, horizon=512, n_envs=4, reuse=4)
+    mode = "weight-shared actor" if shared_policy else "per-UE actors"
+    print(f"\ntraining MAHPPO ({mode}) on the mixed fleet "
+          f"({iterations} iterations)...")
+    cfg = MAHPPOConfig(iterations=iterations, horizon=512, n_envs=4,
+                       reuse=4, shared_policy=shared_policy)
     agent, hist = train_mahppo(env, cfg, seed=0,
                                log_cb=lambda r: print(
                                    f"  iter {r['iteration']:3d} "
@@ -168,12 +185,26 @@ def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
         print(f"loadbal: overhead {load['overhead']:.4f}  "
               f"(route={load['route']})")
 
+    if shared_policy:
+        from repro.rl.mahppo import init_agent
+        n_shared = nets.param_count(agent["actor"])
+        n_per_ue = nets.param_count(
+            init_agent(jax.random.PRNGKey(0), env)["actors"])
+        print(f"\nactor parameters: {n_shared} shared (O(1) in fleet "
+              f"size) vs {n_per_ue} for per-UE actors at N="
+              f"{env.params.n_ue}")
+
     # learned per-UE decisions at the eval state
     from repro.rl.mahppo import _policy_all
     space = env.action_space
     s = env.reset(jax.random.PRNGKey(0), eval_mode=True)
     masks = env.action_masks()
-    dist = _policy_all(agent["actors"], space, env.observe(s), masks)
+    if shared_policy:
+        dist = nets.shared_actor_forward(
+            agent["actor"], space, env.observe_per_ue(s),
+            space.broadcast_masks(masks, env.params.n_ue))
+    else:
+        dist = _policy_all(agent["actors"], space, env.observe(s), masks)
     a_star = jax.vmap(space.mode)(dist, masks)
     for i, b in enumerate(np.asarray(a_star["split"])):
         kind = ("raw offload" if b == 0 else
@@ -211,19 +242,24 @@ def main():
     ap.add_argument("--servers", type=int, default=1, metavar="E",
                     help="size of the edge pool (E > 1 adds a learned "
                          "`route` action head; implies --fleet)")
+    ap.add_argument("--shared-policy", action="store_true",
+                    help="train ONE weight-shared actor over per-UE "
+                         "feature rows instead of per-UE actors — O(1) "
+                         "parameters in the fleet size, transfers "
+                         "zero-shot across fleets (implies --fleet)")
     ap.add_argument("--iterations", type=int, default=15)
     args = ap.parse_args()
 
     churn = (args.churn or args.churn_rate is not None
              or args.leave_rate is not None)
-    if args.fleet or churn or args.servers > 1:
+    if args.fleet or churn or args.servers > 1 or args.shared_policy:
         run_fleet_demo(
             args.arch, args.iterations,
             churn_rate=(0.2 if args.churn_rate is None
                         else args.churn_rate) if churn else 0.0,
             leave_rate=(0.1 if args.leave_rate is None
                         else args.leave_rate) if churn else 0.0,
-            n_servers=args.servers)
+            n_servers=args.servers, shared_policy=args.shared_policy)
         return
 
     cfg = reduced(get_config(args.arch), n_layers=4)

@@ -8,25 +8,83 @@ from __future__ import annotations
 import dataclasses
 from typing import Tuple
 
+import numpy as np
+
 from repro.core import overhead as oh
 from repro.core.cnn import make_resnet18
 from repro.core.split import (FleetPlan, build_fleet, cnn_split_table,
                               transformer_split_table)
 
 
-def make_mixed_fleet(arch: str = "qwen3-1.7b") -> FleetPlan:
+def make_mixed_fleet(arch: str = "qwen3-1.7b", n_ue: int = 4) -> FleetPlan:
     """ResNet18 on a Jetson, ResNet18 on an IoT-class SoC, and two
     reduced-transformer UEs on phone NPUs — each split table built for the
-    device that runs it."""
+    device that runs it. ``n_ue`` cycles that 4-UE device mix to any fleet
+    size (the zero-shot generalization scenarios reuse the same mix at
+    8 and 16 UEs)."""
     from repro.configs import get_config
     cnn = make_resnet18(101)
     tcfg = get_config(arch)
-    plans = [cnn_split_table(cnn, 224, dev=oh.JETSON_NANO),
-             cnn_split_table(cnn, 224, dev=oh.IOT_SOC),
-             transformer_split_table(tcfg, ue_dev=oh.PHONE_NPU),
-             transformer_split_table(tcfg, ue_dev=oh.PHONE_NPU)]
-    return build_fleet(plans, [oh.JETSON_NANO, oh.IOT_SOC,
-                               oh.PHONE_NPU, oh.PHONE_NPU])
+    base = [(cnn_split_table(cnn, 224, dev=oh.JETSON_NANO), oh.JETSON_NANO),
+            (cnn_split_table(cnn, 224, dev=oh.IOT_SOC), oh.IOT_SOC),
+            (transformer_split_table(tcfg, ue_dev=oh.PHONE_NPU),
+             oh.PHONE_NPU),
+            (transformer_split_table(tcfg, ue_dev=oh.PHONE_NPU),
+             oh.PHONE_NPU)]
+    picks = [base[i % len(base)] for i in range(n_ue)]
+    return build_fleet([p for p, _ in picks], [d for _, d in picks])
+
+
+# ------------------------------------------------- per-UE feature extraction
+# Static descriptor rows the env's `observe_per_ue` serves to the
+# weight-shared policy. Everything is a NORMALIZED scalar summary — never a
+# raw table — so the feature dimension is independent of the fleet size N,
+# the widest action count B_max, and the pool size E, which is exactly what
+# lets one policy transfer across fleets and pool layouts.
+
+P_COMPUTE_NORM = 5.0        # W; spans the IoT (0.8) .. phone-NPU (3.0) tiers
+OMEGA_NORM = 1e6            # Hz; the paper's per-channel bandwidth
+BITS_NORM = 1e6             # bits; same scale `observe` uses for s.n
+DIST_NORM = 100.0           # m; same scale `observe` uses for s.d
+
+
+def ue_table_features(l_new, n_new, feasible, p_compute, t0):
+    """(N, 5) static per-UE device/table descriptors from the fleet's
+    (N, B_max+2) overhead tables: normalized compute power draw, full-local
+    seconds (device-speed proxy), feasible-action fraction, and mean
+    feasible local-seconds / offload-bits. Rows permute with the fleet —
+    a permutation-equivariance requirement of `observe_per_ue`."""
+    l = np.asarray(l_new, np.float64)
+    n = np.asarray(n_new, np.float64)
+    feas = np.asarray(feasible, bool)
+    t0 = float(t0)
+    cnt = np.maximum(feas.sum(axis=1), 1)          # full-local always feasible
+    return np.stack([
+        np.asarray(p_compute, np.float64) / P_COMPUTE_NORM,
+        l[:, -1] / t0,
+        feas.mean(axis=1),
+        (l * feas).sum(axis=1) / cnt / t0,
+        (n * feas).sum(axis=1) / cnt / BITS_NORM,
+    ], axis=1).astype(np.float32)
+
+
+def pool_aggregate_features(server_dist, omega, t_edge, feasible, t0):
+    """(4,) fixed-size edge-pool descriptor, independent of E: nearest /
+    mean server distance scale, mean per-channel bandwidth, and the mean
+    edge service time over feasible OFFLOAD slots (full-local — always
+    the last slot, always feasible, definitionally zero edge time — is
+    excluded so it can't deflate the mean). A single paper-default server
+    yields (1, 1, mean omega, 0) — the degenerate pool."""
+    om = np.asarray(omega, np.float64)
+    dist = np.ones((1,)) if server_dist is None \
+        else np.asarray(server_dist, np.float64)
+    te_mean = 0.0
+    if t_edge is not None:
+        feas = np.asarray(feasible, bool)[:, :-1]
+        te = np.asarray(t_edge, np.float64)[:, :-1]    # (N, B_max+1, E)
+        te_mean = float(te[feas].mean() / float(t0))
+    return np.array([dist.min(), dist.mean(), om.mean() / OMEGA_NORM,
+                     te_mean], np.float32)
 
 
 # ---------------------------------------------------------------- edge side

@@ -56,7 +56,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import overhead as oh
-from repro.core.fleets import EdgePool
+from repro.core.fleets import (BITS_NORM, DIST_NORM, EdgePool,
+                               pool_aggregate_features, ue_table_features)
 from repro.core.split import FleetPlan, SplitPlan
 from repro.env.channel import channel_gain, uplink_rates
 from repro.rl.actionspace import (ContinuousHead, DiscreteHead,
@@ -82,6 +83,19 @@ class EnvParams(NamedTuple):
     leave_rate: jnp.ndarray = jnp.float32(0.0)  # per-frame departure prob
     server_dist: Optional[jnp.ndarray] = None   # (E,) distance scale per server
     t_edge: Optional[jnp.ndarray] = None        # (N, B_max+2, E) edge seconds
+
+
+# per-UE featurized observation layout (see MECEnv.observe_per_ue): the
+# dimension is a CONSTANT — independent of fleet size N, action width
+# B_max+2, and pool size E — so one weight-shared policy transfers across
+# fleet sizes, device mixes, and server-pool layouts with zero retraining.
+OBS_UE_OWN = 5              # own queue/task/channel state (zeroed standby)
+OBS_UE_ACT = 1              # activity flag
+OBS_UE_DEVICE = 5           # static device/table descriptor (fleets.py)
+OBS_UE_POOL = 4             # static edge-pool aggregate (fleets.py)
+OBS_UE_FLEET = 4            # mean-field fleet aggregates
+OBS_UE_DIM = OBS_UE_OWN + OBS_UE_ACT + OBS_UE_DEVICE + OBS_UE_POOL \
+    + OBS_UE_FLEET
 
 
 def per_ue(table: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
@@ -205,6 +219,17 @@ class MECEnv:
                             or float(params.leave_rate) > 0.0)
         # dynamic fleets append an activity flag + fleet-size feature per UE
         self.obs_dim = (6 if self.dynamic else 4) * params.n_ue
+        # static rows of the per-UE featurized observation (computed once
+        # in numpy; observe_per_ue closes over them as constants)
+        self.ue_feat_dim = OBS_UE_DIM
+        self._ue_static = jnp.asarray(ue_table_features(
+            params.l_new, params.n_new, params.feasible, params.p_compute,
+            params.t0))
+        self._pool_static = jnp.asarray(pool_aggregate_features(
+            params.server_dist, params.omega, params.t_edge,
+            params.feasible, params.t0))
+        self._min_dist_scale = 1.0 if params.server_dist is None \
+            else float(np.asarray(params.server_dist).min())
         discrete = [DiscreteHead("split", self.n_actions_b),
                     DiscreteHead("channel", self.n_channels)]
         if self.multi_server:
@@ -239,6 +264,50 @@ class MECEnv:
             frac = jnp.broadcast_to(act.sum() / p.n_ue, (p.n_ue,))
             base += [act, frac]
         return jnp.concatenate(base)
+
+    def observe_per_ue(self, s: EnvState):
+        """Structured per-UE feature rows for a WEIGHT-SHARED policy:
+        (N, OBS_UE_DIM), one row per actor, dimension independent of N,
+        B_max, and E (raw tables and pools enter only as normalized scalar
+        summaries — see core.fleets). Row layout:
+
+          own (5, zeroed while standby): queue k, in-flight local seconds,
+              in-flight offload bits, distance, distance to the NEAREST
+              server (pool-position aware)
+          activity flag (1)
+          device/table descriptor (5): fleets.ue_table_features
+          pool aggregate (4): fleets.pool_aggregate_features
+          mean-field fleet aggregates (4): active fraction, mean active
+              queue, mean active distance, active UEs per (server,
+              channel) slot — O(1) context in N, permutation-invariant
+
+        Rows are permutation-EQUIVARIANT under UE reordering (own/device
+        features permute, aggregates are symmetric), which is what makes
+        the shared policy a set function over the fleet."""
+        p = self.params
+        n = p.n_ue
+        act = s.active.astype(jnp.float32)
+        own = jnp.stack([
+            s.k / jnp.maximum(p.lam_tasks, 1.0),
+            s.l / p.t0,
+            s.n / BITS_NORM,
+            s.d / DIST_NORM,
+            s.d * self._min_dist_scale / DIST_NORM,
+        ], axis=1) * act[:, None]
+        n_act = jnp.maximum(act.sum(), 1.0)
+        fleet = jnp.stack([
+            act.sum() / n,
+            (s.k * act).sum() / (n_act * jnp.maximum(p.lam_tasks, 1.0)),
+            (s.d * act).sum() / (n_act * DIST_NORM),
+            act.sum() / (self.n_servers * self.n_channels),
+        ])
+        return jnp.concatenate([
+            own,
+            act[:, None],
+            self._ue_static,
+            jnp.broadcast_to(self._pool_static, (n, OBS_UE_POOL)),
+            jnp.broadcast_to(fleet, (n, OBS_UE_FLEET)),
+        ], axis=1)
 
     def action_masks(self, s: EnvState = None):
         """Per-head feasibility masks ({head: (N, n) bool}; heads without

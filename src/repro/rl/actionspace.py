@@ -137,6 +137,26 @@ class HybridActionSpace:
             return None
         return masks.get(name)
 
+    def broadcast_masks(self, masks, n_actors):
+        """Complete per-actor mask dict {head: (n_actors, n) bool} for
+        EVERY discrete head: heads without an entry get all-True rows and
+        single-actor (n,) rows are broadcast across the fleet. The uniform
+        pytree is what lets a weight-shared actor be vmapped over actor
+        rows with ``in_axes=(0, 0)`` — no special-casing of which heads
+        happen to carry feasibility."""
+        out = {}
+        for h in self.discrete:
+            m = None if masks is None else masks.get(h.name)
+            if m is None:
+                out[h.name] = jnp.ones((n_actors, h.n), bool)
+            else:
+                # unconditional: a no-op for correctly shaped (N, n) masks
+                # and an immediate, clearly-located shape error for stale
+                # ones (e.g. a 4-actor mask reused on an 8-UE env)
+                out[h.name] = jnp.broadcast_to(jnp.asarray(m),
+                                               (n_actors, h.n))
+        return out
+
     # ------------------------------------------------------------ network
     def init_heads(self, key, feat_dim, mlp_init):
         """One output branch per head: (feat_dim, 64, n) logits for a

@@ -8,6 +8,20 @@ is named here, so the single-server (split, channel, power) env and the
 multi-server (split, channel, route, power) env train through the same
 code path.
 
+Two actor modes, selected by ``MAHPPOConfig.shared_policy`` (init /
+sampling / loss / update are generic over both):
+
+* per-UE actors (default): N distinct parameter sets over the flat global
+  observation — the paper's setup, bit-for-bit unchanged.
+* shared policy: ONE parameter set applied to every UE's featurized
+  observation row (``env.observe_per_ue``) via vmap, per-actor feasibility
+  masks flowing through unchanged. Parameters are O(1) in the fleet size
+  and the feature dimension is independent of N/E, so the trained policy
+  transfers zero-shot across fleet sizes, device mixes, and pool layouts
+  (benchmarks/bench_generalization.py). The critic pools the feature rows
+  (mean over the fleet — permutation-invariant), so the whole agent is
+  fleet-size-agnostic.
+
 Paper defaults: ||M||=1024, B=256, K reuse, gamma=0.95, lambda=0.95,
 eps=0.2, zeta=0.001, lr=1e-4.
 """
@@ -39,11 +53,20 @@ class MAHPPOConfig:
     n_envs: int = 8
     iterations: int = 50
     norm_adv: bool = True
+    shared_policy: bool = False  # one weight-shared actor over per-UE rows
 
 
-def init_agent(key, env: MECEnv):
-    n = env.params.n_ue
+def init_agent(key, env: MECEnv, *, shared_policy=False):
+    """Per-UE actors ({"actors": stacked params}) or, with
+    ``shared_policy``, ONE actor over `env.observe_per_ue` feature rows
+    ({"actor": params}) with a mean-pooled critic. The default path's key
+    stream is untouched — bit-for-bit the pre-shared-policy init."""
     ka, kc = jax.random.split(key)
+    if shared_policy:
+        actor = nets.init_actor(ka, env.ue_feat_dim, env.action_space)
+        critic = nets.init_critic(kc, env.ue_feat_dim)
+        return {"actor": actor, "critic": critic}
+    n = env.params.n_ue
     actor_keys = jax.random.split(ka, n)
     actors = jax.vmap(lambda k: nets.init_actor(
         k, env.obs_dim, env.action_space))(actor_keys)
@@ -69,28 +92,50 @@ def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
     space = env.action_space
     masks0 = env.action_masks()                     # {head: (N, n)} per-UE
     n_ue = env.params.n_ue
+    shared = cfg.shared_policy
+    # the shared actor is vmapped over actor rows with in_axes=(0, 0), so
+    # its mask pytree must be complete (every discrete head, (N, n) leaves)
+    masks0_full = space.broadcast_masks(masks0, n_ue) if shared else None
+
+    def _dist(agent, obs, masks):
+        """Per-head distribution stacks (N, ...) for ONE env's observation
+        — (obs_dim,) through N per-UE actors, or (N, F) feature rows
+        through the weight-shared actor."""
+        if shared:
+            return nets.shared_actor_forward(agent["actor"], space, obs,
+                                             masks)
+        return _policy_all(agent["actors"], space, obs, masks)
+
+    def _value(agent, obs):
+        """Critic input: the flat global observation, or (shared mode) the
+        mean-pooled feature rows — permutation-invariant and O(1) in N."""
+        return nets.critic_forward(agent["critic"],
+                                   obs.mean(axis=0) if shared else obs)
+
+    def _observe(states):
+        fn = env.observe_per_ue if shared else env.observe
+        return jax.vmap(fn)(states)
 
     def sample_step(agent, key, states):
         """states: batched EnvState over E envs."""
-        obs = jax.vmap(env.observe)(states)                       # (E, D)
+        obs = _observe(states)                  # (E, D) / shared: (E, N, F)
         active = states.active.astype(jnp.float32)                # (E, N)
         if env.dynamic:
             # state-dependent masks: inactive actors pinned to full-local
             masks = jax.vmap(env.action_masks)(states)            # (E,N,n)
-            dist = jax.vmap(
-                lambda o, m: _policy_all(agent["actors"], space, o, m))(
-                    obs, masks)
+            if shared:
+                masks = jax.vmap(
+                    lambda m: space.broadcast_masks(m, n_ue))(masks)
+            dist = jax.vmap(lambda o, m: _dist(agent, o, m))(obs, masks)
         else:
-            masks = masks0
-            dist = jax.vmap(
-                lambda o: _policy_all(agent["actors"], space, o, masks0))(
-                    obs)
+            masks = masks0_full if shared else masks0
+            dist = jax.vmap(lambda o: _dist(agent, o, masks))(obs)
         keys = jax.random.split(key, obs.shape[0] * n_ue).reshape(
             obs.shape[0], n_ue, 2)
         actions = _sample_all(space, keys, dist, masks,
                               mask_axis=0 if env.dynamic else None)
         logp = jax.vmap(jax.vmap(space.log_prob))(dist, actions, active)
-        value = jax.vmap(lambda o: nets.critic_forward(agent["critic"], o))(obs)
+        value = jax.vmap(lambda o: _value(agent, o))(obs)
         phys = space.execute(actions)
         nstates, reward, done, info = jax.vmap(env.step)(states, phys)
         tr = {"obs": obs, "actions": actions, "logp": logp,
@@ -109,17 +154,16 @@ def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
             return (states, key), tr
 
         (states, key), traj = jax.lax.scan(body, (states, key), None, length=T)
-        last_obs = jax.vmap(env.observe)(states)
-        last_v = jax.vmap(
-            lambda o: nets.critic_forward(agent["critic"], o))(last_obs)
+        last_obs = _observe(states)
+        last_v = jax.vmap(lambda o: _value(agent, o))(last_obs)
         return states, key, traj, last_v
 
     def loss_fn(agent, batch):
         obs, actions = batch["obs"], batch["actions"]
         adv, ret, logp_old = batch["adv"], batch["ret"], batch["logp"]
         act = batch["active"]                                     # (B, N)
-        dist = jax.vmap(
-            lambda o: _policy_all(agent["actors"], space, o, masks0))(obs)
+        dist = jax.vmap(lambda o: _dist(
+            agent, o, masks0_full if shared else masks0))(obs)
         logp = jax.vmap(jax.vmap(space.log_prob))(dist, actions, act)
         ratio = jnp.exp(logp - logp_old)                          # (B, N)
         a = adv[:, None]
@@ -132,7 +176,7 @@ def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
         n_act = jnp.maximum(act.sum(axis=0), 1.0)                 # (N,)
         actor_loss = -(((surr * act).sum(axis=0) / n_act).sum()
                        + cfg.ent_coef * ((ent * act).sum(axis=0) / n_act).sum())
-        v = jax.vmap(lambda o: nets.critic_forward(agent["critic"], o))(obs)
+        v = jax.vmap(lambda o: _value(agent, o))(obs)
         critic_loss = jnp.mean((v - ret) ** 2)
         total = actor_loss + critic_loss
         return total, {"actor_loss": actor_loss, "value_loss": critic_loss,
@@ -144,7 +188,9 @@ def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
         T, E = adv.shape
         M = T * E
         flat = {
-            "obs": traj["obs"].reshape(M, -1),
+            # shared mode keeps the per-UE row structure: (M, N, F)
+            "obs": traj["obs"].reshape(M, n_ue, -1) if shared
+            else traj["obs"].reshape(M, -1),
             "actions": jax.tree_util.tree_map(
                 lambda x: x.reshape(M, n_ue), traj["actions"]),
             "logp": traj["logp"].reshape(M, n_ue),
@@ -191,7 +237,7 @@ def train_mahppo(env: MECEnv, cfg: MAHPPOConfig, seed=0,
                  log_cb: Callable = None):
     key = jax.random.PRNGKey(seed)
     key, ki, kr = jax.random.split(key, 3)
-    agent = init_agent(ki, env)
+    agent = init_agent(ki, env, shared_policy=cfg.shared_policy)
     opt = adamw_init(agent)
     states = jax.vmap(env.reset)(jax.random.split(kr, cfg.n_envs))
     iteration = make_train_fns(env, cfg)
@@ -213,9 +259,16 @@ def evaluate_policy(env: MECEnv, agent, *, frames=64, seed=0,
     """Run eval-mode episodes; report per-task latency/energy (Eq. 7/8
     realized under the learned policy) plus cumulative reward. On dynamic
     fleets the per-task overhead is aggregated over ACTIVE UEs only —
-    standby slots neither transmit nor weigh into t_task/e_task."""
+    standby slots neither transmit nor weigh into t_task/e_task.
+
+    Dispatches on the agent pytree: a weight-shared agent ({"actor": ...},
+    from shared_policy training) is applied to `env.observe_per_ue` rows —
+    including envs of a DIFFERENT fleet size or pool layout than it was
+    trained on (zero-shot transfer), since the feature dimension is
+    N/E-independent."""
     space = env.action_space
     n_ue = env.params.n_ue
+    shared = "actor" in agent
 
     @jax.jit
     def rollout(key):
@@ -223,9 +276,14 @@ def evaluate_policy(env: MECEnv, agent, *, frames=64, seed=0,
 
         def body(carry, sub):
             s = carry
-            obs = env.observe(s)
             masks = env.action_masks(s)      # state-dependent when dynamic
-            dist = _policy_all(agent["actors"], space, obs, masks)
+            if shared:
+                masks = space.broadcast_masks(masks, n_ue)
+                dist = nets.shared_actor_forward(
+                    agent["actor"], space, env.observe_per_ue(s), masks)
+            else:
+                dist = _policy_all(agent["actors"], space, env.observe(s),
+                                   masks)
             if deterministic:
                 actions = jax.vmap(space.mode)(dist, masks)
             else:

@@ -59,6 +59,26 @@ def actor_forward(p, space: HybridActionSpace, obs, masks=None):
     return space.forward(p["heads"], h, _mlp, masks)
 
 
+def shared_actor_forward(p, space: HybridActionSpace, feats, masks):
+    """ONE actor parameter set applied to every fleet row via vmap — the
+    weight-shared fleet-generalist policy. ``feats``: (N, F) per-UE
+    feature rows (``env.observe_per_ue``); ``masks``: per-actor dict with
+    (N, n) leaves (``space.broadcast_masks`` builds a complete one).
+    Returns per-head distribution stacks with a leading actor axis — the
+    same pytree shape as vmapping N distinct actors, so everything
+    downstream (sample/log_prob/entropy/mode) is mode-agnostic."""
+    return jax.vmap(lambda o, m: actor_forward(p, space, o, m),
+                    in_axes=(0, 0))(feats, masks)
+
+
+def param_count(tree) -> int:
+    """Total parameter count of an agent/actor pytree. The shared-policy
+    actor is O(1) in the fleet size; per-UE actors are O(N) — the
+    generalization benchmark reports both."""
+    return sum(int(np.prod(x.shape))
+               for x in jax.tree_util.tree_leaves(tree))
+
+
 def init_critic(key, obs_dim):
     return _mlp_init(key, (obs_dim, 256, 128, 64, 1), out_scale=1.0)
 

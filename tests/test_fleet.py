@@ -250,6 +250,85 @@ def test_churn_env_matches_preactionspace_golden(pool):
     _golden_check(env, _GOLD["churn"], "churn")
 
 
+# Golden per-UE feature rows (hex float32 (N, OBS_UE_DIM) matrices) pinned
+# at the PR-4 introduction of `observe_per_ue`: the homogeneous and mixed
+# static fleets, a churned fleet with a planted standby UE (zeroed own
+# features, live aggregates), and the mixed fleet through the 2-server
+# demo pool. Any change to the feature layout, normalization, or the
+# static fleets.py descriptors shows up here.
+_GOLD_FEATS = {
+    "homo": "295c6f3f0000000000000000cfb9133fcfb9133f0000803f3d0ad73e"
+            "2a7b013e0000803f3b069c3d857a7a3e0000803f0000803f0000803f"
+            "000000000000803f295c6f3fa627c53e0000c03f1f856b3f00000000"
+            "0000000011d3913e11d3913e0000803f3d0ad73e2a7b013e0000803f"
+            "3b069c3d857a7a3e0000803f0000803f0000803f000000000000803f"
+            "295c6f3fa627c53e0000c03f3333733f00000000000000004430963e"
+            "4430963e0000803f3d0ad73e2a7b013e0000803f3b069c3d857a7a3e"
+            "0000803f0000803f0000803f000000000000803f295c6f3fa627c53e"
+            "0000c03f",
+    "mixed": "295c6f3f0000000000000000cfb9133fcfb9133f0000803f3d0ad73e"
+             "2a7b013e0000803f3b069c3d857a7a3e0000803f0000803f0000803f"
+             "000000000000803f295c6f3fa627c53e0000c03f1f856b3f00000000"
+             "0000000011d3913e11d3913e0000803f9a99193f56248e40abaa2a3f"
+             "877b0140f5bd863e0000803f0000803f0000803f000000000000803f"
+             "295c6f3fa627c53e0000c03f3333733f00000000000000004430963e"
+             "4430963e0000803f0ad7233ee510e93f0000803f09678c3f857a7a3e"
+             "0000803f0000803f0000803f000000000000803f295c6f3fa627c53e"
+             "0000c03f",
+    "churn": "5555553f0000000000000000cfb9133fcfb9133f0000803f3d0ad73e"
+             "2a7b013e0000803f3b069c3d857a7a3e0000803f0000803f0000803f"
+             "00000000abaa2a3f9a99593ff1d1de3e0000803f0000000000000000"
+             "000000000000000000000000000000003d0ad73e2a7b013e0000803f"
+             "3b069c3d857a7a3e0000803f0000803f0000803f00000000abaa2a3f"
+             "9a99593ff1d1de3e0000803fdedd5d3f00000000000000004430963e"
+             "4430963e0000803f3d0ad73e2a7b013e0000803f3b069c3d857a7a3e"
+             "0000803f0000803f0000803f00000000abaa2a3f9a99593ff1d1de3e"
+             "0000803f",
+    "pool2": "295c6f3f0000000000000000cfb9133fcfb9133f0000803f3d0ad73e"
+             "2a7b013e0000803f3b069c3d857a7a3e0000803f9a99993f0000803f"
+             "b1befe3e0000803f295c6f3fa627c53e0000403f1f856b3f00000000"
+             "0000000011d3913e11d3913e0000803f9a99193f56248e40abaa2a3f"
+             "877b0140f5bd863e0000803f9a99993f0000803fb1befe3e0000803f"
+             "295c6f3fa627c53e0000403f3333733f00000000000000004430963e"
+             "4430963e0000803f0ad7233ee510e93f0000803f09678c3f857a7a3e"
+             "0000803f9a99993f0000803fb1befe3e0000803f295c6f3fa627c53e"
+             "0000403f",
+}
+
+
+def _feat_hex(env, s):
+    return np.asarray(env.observe_per_ue(s), np.float32).tobytes().hex()
+
+
+def test_observe_per_ue_matches_golden(mixed_fleet):
+    from repro.core.fleets import make_edge_pool
+    from repro.env.mecenv import OBS_UE_DIM
+    plan = cnn_split_table(make_resnet18(101), 224)
+    cases = {
+        "homo": MECEnv(make_env_params(plan, n_ue=3, n_channels=2)),
+        "mixed": MECEnv(make_env_params(mixed_fleet, n_channels=2)),
+        "pool2": MECEnv(make_env_params(mixed_fleet, n_channels=2,
+                                        pool=make_edge_pool(2))),
+    }
+    for name, env in cases.items():
+        assert env.ue_feat_dim == OBS_UE_DIM
+        s = env.reset(jax.random.PRNGKey(3))
+        assert env.observe_per_ue(s).shape == (3, OBS_UE_DIM)
+        assert _feat_hex(env, s) == _GOLD_FEATS[name], name
+
+
+def test_observe_per_ue_churn_matches_golden():
+    """A planted standby UE: zeroed own features + zero activity flag,
+    static descriptors intact, aggregates over the two live UEs."""
+    plan = cnn_split_table(make_resnet18(101), 224)
+    env = MECEnv(make_env_params(plan, n_ue=3, n_channels=2,
+                                 churn_rate=0.4, leave_rate=0.2,
+                                 lam_tasks=30.0))
+    s = env.reset(jax.random.PRNGKey(3))
+    s = s._replace(active=jnp.asarray([True, False, True]))
+    assert _feat_hex(env, s) == _GOLD_FEATS["churn"]
+
+
 def test_split_plan_invariants_enforced():
     from repro.core.split import _finalize
     rows = [(0.0, 0.0, 0.0, 0.0, 100.0, True),

@@ -1,0 +1,161 @@
+"""Properties of the per-UE featurized observation (`observe_per_ue`).
+
+Two layers, mirroring tests/test_churn_properties.py:
+ * seeded tests that always run (no hypothesis needed), and
+ * hypothesis-driven variants over arbitrary states/permutations/masks
+   when hypothesis is installed (CI installs it).
+
+The contracts the weight-shared policy relies on:
+ 1. permutation EQUIVARIANCE: reordering the fleet (tables, profiles, and
+    state) reorders the feature rows and changes nothing else — the
+    policy is a set function over UEs.
+ 2. standby UEs get ZEROED own-features and a zero activity flag, but
+    their static descriptors stay and the fleet aggregates are computed
+    over the ACTIVE members only (identical in every row).
+ 3. the feature dimension is a constant: invariant to fleet size N, edge
+    pool size E, and the widest action count B_max.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = None
+
+from repro.configs import get_config
+from repro.core import overhead as oh
+from repro.core.cnn import make_resnet18
+from repro.core.fleets import make_edge_pool
+from repro.core.split import build_fleet, cnn_split_table, \
+    transformer_split_table
+from repro.env.mecenv import (MECEnv, OBS_UE_ACT, OBS_UE_DIM, OBS_UE_OWN,
+                              make_env_params)
+
+_STATIC_LO = OBS_UE_OWN + OBS_UE_ACT            # device+pool block start
+_FLEET_LO = OBS_UE_DIM - 4                      # mean-field block start
+
+
+@pytest.fixture(scope="module")
+def plans():
+    cnn = cnn_split_table(make_resnet18(101), 224)
+    cnn_iot = cnn_split_table(make_resnet18(101), 224, dev=oh.IOT_SOC)
+    tf_small = transformer_split_table(get_config("qwen3-1.7b"),
+                                       ue_dev=oh.PHONE_NPU, n_points=2)
+    return [(cnn, oh.JETSON_NANO), (tf_small, oh.PHONE_NPU),
+            (cnn_iot, oh.IOT_SOC)]
+
+
+def _env(plans, order, **kw):
+    picked = [plans[i] for i in order]
+    fleet = build_fleet([p for p, _ in picked], [d for _, d in picked])
+    return MECEnv(make_env_params(fleet, n_channels=2, **kw))
+
+
+def _rand_state(env, seed, active=None):
+    rng = np.random.RandomState(seed)
+    n = env.params.n_ue
+    s = env.reset(jax.random.PRNGKey(seed))
+    return s._replace(
+        k=jnp.asarray(rng.uniform(0, 300, n), jnp.float32),
+        l=jnp.asarray(rng.uniform(0, 0.5, n), jnp.float32),
+        n=jnp.asarray(rng.uniform(0, 2e6, n), jnp.float32),
+        d=jnp.asarray(rng.uniform(1, 100, n), jnp.float32),
+        active=jnp.asarray(np.ones(n, bool) if active is None
+                           else np.asarray(active)))
+
+
+def _perm_check(plans, perm, seed):
+    """observe_per_ue(permuted fleet, permuted state) ==
+    permuted observe_per_ue(fleet, state): bitwise on the per-UE blocks;
+    the mean-field aggregates are only close-to-equal, since f32 summation
+    order legitimately changes under the permutation (last-ulp effects)."""
+    env = _env(plans, [0, 1, 2])
+    env_p = _env(plans, perm)
+    s = _rand_state(env, seed)
+    idx = np.asarray(perm)
+    s_p = s._replace(k=s.k[idx], l=s.l[idx], n=s.n[idx], d=s.d[idx],
+                     active=s.active[idx])
+    f = np.asarray(env.observe_per_ue(s))
+    f_p = np.asarray(env_p.observe_per_ue(s_p))
+    np.testing.assert_array_equal(f_p[:, :_FLEET_LO], f[idx, :_FLEET_LO])
+    np.testing.assert_allclose(f_p[:, _FLEET_LO:], f[idx, _FLEET_LO:],
+                               rtol=1e-6, atol=1e-7)
+
+
+def _standby_check(plans, mask, seed):
+    """Inactive rows: zeroed own block + zero flag, static block intact,
+    fleet aggregates over active members only and equal in every row."""
+    env = _env(plans, [0, 1, 2], churn_rate=0.2, leave_rate=0.1)
+    mask = np.asarray(mask, bool)
+    s = _rand_state(env, seed, active=mask)
+    f = np.asarray(env.observe_per_ue(s))
+    f_all = np.asarray(env.observe_per_ue(
+        s._replace(active=jnp.ones(3, bool))))
+    assert np.all(f[~mask, :OBS_UE_OWN] == 0.0)
+    assert np.all(f[~mask, OBS_UE_OWN] == 0.0)          # activity flag
+    assert np.all(f[mask, OBS_UE_OWN] == 1.0)
+    # static descriptors don't depend on membership
+    np.testing.assert_array_equal(f[:, _STATIC_LO:_FLEET_LO],
+                                  f_all[:, _STATIC_LO:_FLEET_LO])
+    # aggregates: identical across rows, computed over active UEs only
+    agg = f[:, _FLEET_LO:]
+    np.testing.assert_array_equal(agg, np.broadcast_to(agg[0], agg.shape))
+    n_act = max(mask.sum(), 1)
+    k = np.asarray(s.k, np.float64)
+    d = np.asarray(s.d, np.float64)
+    lam = float(env.params.lam_tasks)
+    np.testing.assert_allclose(agg[0, 0], mask.sum() / 3, rtol=1e-6)
+    np.testing.assert_allclose(
+        agg[0, 1], (k * mask).sum() / (n_act * max(lam, 1.0)), rtol=1e-5)
+    np.testing.assert_allclose(
+        agg[0, 2], (d * mask).sum() / (n_act * 100.0), rtol=1e-5)
+
+
+def test_permutation_equivariant_seeded(plans):
+    for perm in ([1, 0, 2], [2, 1, 0], [1, 2, 0]):
+        for seed in (0, 7):
+            _perm_check(plans, perm, seed)
+
+
+def test_standby_rows_zeroed_seeded(plans):
+    for mask in ([True, False, True], [False, False, True],
+                 [False, False, False]):
+        for seed in (3, 11):
+            _standby_check(plans, mask, seed)
+
+
+def test_feature_dim_invariant_to_n_e_and_tables(plans):
+    """One constant feature dimension across fleet sizes, pool sizes, and
+    action-table widths — the transfer precondition."""
+    dims = set()
+    for order in ([0], [0, 1, 2], [1, 1, 2, 0, 2, 1]):
+        for n_servers in (1, 2, 3):
+            pool = make_edge_pool(n_servers) if n_servers > 1 else None
+            env = _env(plans, order, pool=pool)
+            s = env.reset(jax.random.PRNGKey(0))
+            f = env.observe_per_ue(s)
+            assert f.shape == (len(order), env.ue_feat_dim)
+            dims.add(int(f.shape[1]))
+    # churn env too: same rows, no appended churn features
+    env = _env(plans, [0, 1, 2], churn_rate=0.3, leave_rate=0.2)
+    dims.add(int(env.observe_per_ue(
+        env.reset(jax.random.PRNGKey(0))).shape[1]))
+    assert dims == {OBS_UE_DIM}
+
+
+if given is not None:
+    # keyword-form @given so the module-scoped `plans` fixture still
+    # resolves through pytest (positional strategies would shadow it)
+    @settings(max_examples=15, deadline=None)
+    @given(perm=st.permutations([0, 1, 2]), seed=st.integers(0, 2**31 - 1))
+    def test_permutation_equivariant_property(plans, perm, seed):
+        _perm_check(plans, list(perm), seed)
+
+    @settings(max_examples=15, deadline=None)
+    @given(mask=st.lists(st.booleans(), min_size=3, max_size=3),
+           seed=st.integers(0, 2**31 - 1))
+    def test_standby_rows_zeroed_property(plans, mask, seed):
+        _standby_check(plans, mask, seed)

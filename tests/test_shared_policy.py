@@ -1,0 +1,284 @@
+"""Fleet-generalist shared policy (PR 4).
+
+Three layers of guarantees:
+
+1. The DEFAULT per-UE-actors path is bitwise-unchanged from PR 3: sha256
+   over every leaf of the freshly-initialized agent (init key stream) and
+   of the agent after one jitted iteration (sample draws, log-probs,
+   minibatch selection, optimizer math), plus the exact post-iteration
+   metrics bytes — captured at PR-3 HEAD before the refactor.
+2. The shared mode trains/evaluates end-to-end on static, churn, and
+   multi-server envs; per-actor feasibility masks still bind.
+3. A hand-computed 2-UE scenario where ONE shared parameter set must act
+   differently per UE — via its feasibility mask on one head and purely
+   via its feature row on another — guards the mask/feature broadcasting.
+"""
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import overhead as oh
+from repro.core.cnn import make_resnet18
+from repro.core.fleets import make_edge_pool, make_mixed_fleet
+from repro.core.split import build_fleet, cnn_split_table, \
+    transformer_split_table
+from repro.env.channel import channel_gain, uplink_rates
+from repro.env.mecenv import (MECEnv, OBS_UE_ACT, OBS_UE_OWN,
+                              make_env_params)
+from repro.optim import adamw_init
+from repro.rl import nets
+from repro.rl.mahppo import (MAHPPOConfig, evaluate_policy, init_agent,
+                             make_train_fns, train_mahppo)
+
+
+def _tree_sha(tree):
+    h = hashlib.sha256()
+    for path, leaf in sorted(
+            jax.tree_util.tree_flatten_with_path(tree)[0],
+            key=lambda kv: jax.tree_util.keystr(kv[0])):
+        h.update(jax.tree_util.keystr(path).encode())
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+@pytest.fixture(scope="module")
+def mixed_fleet():
+    cnn = cnn_split_table(make_resnet18(101), 224)
+    cnn_iot = cnn_split_table(make_resnet18(101), 224, dev=oh.IOT_SOC)
+    tf_small = transformer_split_table(get_config("qwen3-1.7b"),
+                                       ue_dev=oh.PHONE_NPU, n_points=2)
+    return build_fleet([cnn, tf_small, cnn_iot],
+                       [oh.JETSON_NANO, oh.PHONE_NPU, oh.IOT_SOC])
+
+
+# sha256 goldens captured at PR-3 HEAD (pre-shared-policy refactor) from
+# init_agent / one jitted iteration on the 3-UE mixed fleet, with
+# MAHPPOConfig(horizon=64, n_envs=2, reuse=2, batch=32), PRNGKey(0).
+_GOLD_TRAIN = {
+    "mixed": {
+        "init_sha": "f4d630df7320aa7e63c9937010893d649bb3a978"
+                    "174078a996b7105346deede0",
+        "post_sha": "26d3e7ffeba66330720583910bf34e833f4a57b0"
+                    "22ec35197d330fdb4273f55f",
+        "metrics": {"actor_loss": "3acd6a3d", "completed": "00803841",
+                    "energy": "1cf8b23f", "entropy": "821f7140",
+                    "ratio": "10e47f3f", "reward_mean": "5e5602bf",
+                    "value_loss": "56305d41"},
+        "key": "37594efbb116e571",
+    },
+    "pool": {
+        "init_sha": "3db39d294d66bad1b475184662b2f252d4ef3043"
+                    "f52ded723ffcf8e147a088f0",
+        "post_sha": "2347b09513f09131beb8723cab3e8411113ab575"
+                    "49b5951346f7cad6f9ba7486",
+        "metrics": {"actor_loss": "15a48fbd", "completed": "00803c41",
+                    "energy": "b461e33f", "entropy": "dad08e40",
+                    "ratio": "abd17f3f", "reward_mean": "f43ababe",
+                    "value_loss": "c510e140"},
+        "key": "37594efbb116e571",
+    },
+    "churn": {
+        "init_sha": "42dd0154a706180c2e39cf316831ac32d0b55a97"
+                    "f466a6c6c37a5c957efdb6d2",
+        "post_sha": "9ec5fb0cfd2e3adcd590cda7779c130e06cfbf3b"
+                    "67dc5978ccb1a0ccc441898d",
+        "metrics": {"actor_loss": "2b0f53be", "completed": "00807741",
+                    "energy": "a308ab3f", "entropy": "cb3a2040",
+                    "ratio": "fffb7f3f", "reward_mean": "147cb9be",
+                    "value_loss": "f5dc9740"},
+        "key": "37594efbb116e571",
+    },
+}
+
+
+def _env_for(name, fleet):
+    if name == "pool":
+        return MECEnv(make_env_params(fleet, n_channels=2,
+                                      pool=make_edge_pool(2)))
+    if name == "churn":
+        return MECEnv(make_env_params(fleet, n_channels=2,
+                                      churn_rate=0.3, leave_rate=0.2))
+    return MECEnv(make_env_params(fleet, n_channels=2))
+
+
+@pytest.mark.parametrize("name", ["mixed", "pool", "churn"])
+def test_per_ue_actors_path_bitwise_unchanged_from_pr3(mixed_fleet, name):
+    """shared_policy=False must be the PR-3 code path EXACTLY: same init
+    key stream, same sample draws, same log-probs/updates, same final
+    collection key — leaf-for-leaf, byte-for-byte."""
+    env = _env_for(name, mixed_fleet)
+    cfg = MAHPPOConfig(iterations=1, horizon=64, n_envs=2, reuse=2,
+                       batch=32)
+    key = jax.random.PRNGKey(0)
+    agent = init_agent(key, env)
+    g = _GOLD_TRAIN[name]
+    assert _tree_sha(agent) == g["init_sha"]
+    opt = adamw_init(agent)
+    states = jax.vmap(env.reset)(jax.random.split(key, cfg.n_envs))
+    iteration = make_train_fns(env, cfg)
+    agent, opt, key, states, metrics = iteration(agent, opt, key, states)
+    assert _tree_sha(agent) == g["post_sha"]
+    got = {k: np.float32(v).tobytes().hex() for k, v in metrics.items()}
+    assert got == g["metrics"]
+    assert np.asarray(key, np.uint32).tobytes().hex() == g["key"]
+
+
+@pytest.mark.parametrize("name", ["mixed", "pool", "churn"])
+def test_shared_policy_trains_on_every_env_kind(mixed_fleet, name):
+    """One jitted shared-policy iteration end-to-end; the agent is a
+    single actor (no leading fleet axis) and metrics are finite."""
+    env = _env_for(name, mixed_fleet)
+    cfg = MAHPPOConfig(iterations=1, horizon=64, n_envs=2, reuse=1,
+                       batch=32, shared_policy=True)
+    key = jax.random.PRNGKey(0)
+    agent = init_agent(key, env, shared_policy=True)
+    assert "actor" in agent and "actors" not in agent
+    # one parameter set: trunk input is the per-UE feature row, 2-D weight
+    assert agent["actor"]["trunk"][0]["w"].shape == (env.ue_feat_dim, 256)
+    opt = adamw_init(agent)
+    states = jax.vmap(env.reset)(jax.random.split(key, cfg.n_envs))
+    iteration = make_train_fns(env, cfg)
+    agent, opt, key, states, metrics = iteration(agent, opt, key, states)
+    assert np.isfinite(float(metrics["reward_mean"]))
+    res = evaluate_policy(env, agent, frames=8)
+    assert np.isfinite(res["t_task"]) and np.isfinite(res["reward"])
+
+
+def test_shared_sampling_respects_per_actor_masks(mixed_fleet):
+    """The weight-shared actor still draws only feasible actions per UE:
+    UE1's padded split slots (3, 4) are never sampled even though the same
+    parameters happily sample them for the unconstrained UEs."""
+    env = MECEnv(make_env_params(mixed_fleet, n_channels=2))
+    space = env.action_space
+    actor = nets.init_actor(jax.random.PRNGKey(0), env.ue_feat_dim, space)
+    feats = env.observe_per_ue(env.reset(jax.random.PRNGKey(1)))
+    masks = space.broadcast_masks(env.action_masks(), env.params.n_ue)
+    dist = nets.shared_actor_forward(actor, space, feats, masks)
+    mask = np.asarray(env.action_masks()["split"])
+    for seed in range(200):
+        keys = jax.random.split(jax.random.PRNGKey(seed), env.params.n_ue)
+        a = jax.vmap(space.sample)(keys, dist, masks)
+        for ue, b in enumerate(np.asarray(a["split"])):
+            assert mask[ue, int(b)], (ue, int(b))
+
+
+def test_param_count_constant_in_fleet_size():
+    """The whole point of the shared policy: O(1) parameters in N (per-UE
+    actors are O(N)), and the feature dimension is N/E-invariant so the
+    SAME agent evaluates on a bigger fleet zero-shot."""
+    counts = {}
+    for n in (2, 4, 8):
+        env = MECEnv(make_env_params(make_mixed_fleet(n_ue=n),
+                                     n_channels=2))
+        sh = init_agent(jax.random.PRNGKey(0), env, shared_policy=True)
+        pu = init_agent(jax.random.PRNGKey(0), env)
+        counts[n] = (nets.param_count(sh), nets.param_count(pu))
+    (s2, p2), (s4, p4), (s8, p8) = counts[2], counts[4], counts[8]
+    assert s2 == s4 == s8                       # shared: constant in N
+    assert p8 > p4 > p2                         # per-UE: grows with N
+    assert s8 < p8
+
+
+def test_shared_agent_transfers_across_fleet_size_and_pool():
+    """An agent initialized for the 4-UE pool env evaluates UNMODIFIED on
+    an 8-UE fleet and on a different 2-server layout (shapes line up
+    because the feature dim is N/E-independent; route head needs equal E)."""
+    pool = make_edge_pool(2)
+    env4 = MECEnv(make_env_params(make_mixed_fleet(n_ue=4), n_channels=2,
+                                  pool=pool))
+    agent = init_agent(jax.random.PRNGKey(0), env4, shared_policy=True)
+    env8 = MECEnv(make_env_params(make_mixed_fleet(n_ue=8), n_channels=2,
+                                  pool=pool))
+    # same E (the route head's width must match) but a different LAYOUT:
+    # the GPU tier near the cell center, the v5e far and bandwidth-starved
+    from repro.core.fleets import EdgePool
+    alt = EdgePool((oh.ServerProfile.from_device(oh.EDGE_GPU),
+                    oh.ServerProfile.from_device(oh.TPU_V5E,
+                                                 dist_scale=1.6,
+                                                 bw_scale=0.7)))
+    env_alt = MECEnv(make_env_params(make_mixed_fleet(n_ue=4),
+                                     n_channels=2, pool=alt))
+    for env in (env8, env_alt):
+        res = evaluate_policy(env, agent, frames=4)
+        assert np.isfinite(res["t_task"]) and np.isfinite(res["e_task"])
+
+
+def test_evaluate_policy_shared_mode_hand_computed():
+    """2-UE fleet, ONE shared parameter set, hand-built weights:
+
+    * the split head's logits are pure bias — UE0 takes slot 3, but UE1's
+      feasibility mask forbids slots 3/4 so its mode falls to slot 1: the
+      mask alone differentiates the action.
+    * the channel head reads the feasible-fraction FEATURE through a
+      saturated tanh threshold — UE0 (all-feasible CNN table) goes to
+      channel 0, UE1 (padded transformer table) to channel 1: the feature
+      row alone differentiates the action.
+
+    With both UEs on different channels there is no interference and every
+    frame is identical, so evaluate_policy's completion-weighted
+    t_task/e_task must equal the hand-computed Eq. 7/8 overheads."""
+    cnn = cnn_split_table(make_resnet18(101), 224)
+    tf_small = transformer_split_table(get_config("qwen3-1.7b"),
+                                       ue_dev=oh.PHONE_NPU, n_points=2)
+    fleet = build_fleet([cnn, tf_small], [oh.JETSON_NANO, oh.PHONE_NPU])
+    env = MECEnv(make_env_params(fleet, n_channels=2, lam_tasks=500.0))
+    space = env.action_space
+    feas = np.asarray(env.params.feasible)
+    assert feas[0, 3] and not feas[1, 3] and not feas[1, 4]
+
+    K, u_star = 100.0, 0.7
+    j_feas = OBS_UE_OWN + OBS_UE_ACT + 2     # feasible-fraction feature
+    feats = np.asarray(env.observe_per_ue(
+        env.reset(jax.random.PRNGKey(0), eval_mode=True)))
+    assert feats[0, j_feas] == 1.0
+    assert 0.0 < feats[1, j_feas] < 0.8      # 4 of 6 slots feasible
+
+    actor = nets.init_actor(jax.random.PRNGKey(0), env.ue_feat_dim, space)
+    actor = jax.tree_util.tree_map(jnp.zeros_like, actor)
+    # trunk: h[0] = tanh(K * tanh(K * (feas_frac - 0.8))) = ±1 exactly
+    # (f32 tanh saturates); every other trunk unit stays 0
+    actor["trunk"][0]["w"] = actor["trunk"][0]["w"].at[j_feas, 0].set(K)
+    actor["trunk"][0]["b"] = actor["trunk"][0]["b"].at[0].set(-0.8 * K)
+    actor["trunk"][1]["w"] = actor["trunk"][1]["w"].at[0, 0].set(K)
+    # split: pure bias — 5.0 on slot 3 (UE1-infeasible), 4.0 on slot 1
+    actor["heads"]["split"][-1]["b"] = jnp.zeros(
+        (env.n_actions_b,)).at[3].set(5.0).at[1].set(4.0)
+    # channel: z = tanh(±K) = ±1 -> logits (±5, ∓5)
+    actor["heads"]["channel"][0]["w"] = \
+        actor["heads"]["channel"][0]["w"].at[0, 0].set(K)
+    actor["heads"]["channel"][-1]["w"] = \
+        actor["heads"]["channel"][-1]["w"].at[0, 0].set(5.0).at[0, 1].set(-5.0)
+    actor["heads"]["power"][-1]["b"] = jnp.array([u_star, -1.0])
+
+    # the shared actor's modes differ per UE: mask-driven on split,
+    # feature-driven on channel
+    masks = space.broadcast_masks(env.action_masks(), 2)
+    dist = nets.shared_actor_forward(
+        actor, space, jnp.asarray(feats), masks)
+    a_star = jax.vmap(space.mode)(dist, masks)
+    np.testing.assert_array_equal(np.asarray(a_star["split"]), [3, 1])
+    np.testing.assert_array_equal(np.asarray(a_star["channel"]), [0, 1])
+
+    res = evaluate_policy(env, {"actor": actor}, frames=4)
+
+    # hand-computed Eq. 7/8: both UEs at d=50, different channels => each
+    # sees a clean channel at p_tx = sigmoid(u*) * p_max
+    prm = env.params
+    p_tx = float(jax.nn.sigmoid(u_star) * prm.p_max)
+    g = channel_gain(jnp.full((2,), 50.0), prm.pathloss)
+    r = np.asarray(jnp.maximum(uplink_rates(
+        jnp.full((2,), p_tx), jnp.asarray([0, 1]), g,
+        jnp.asarray([True, True]), omega=prm.omega, sigma=prm.sigma), 1.0))
+    l_b = np.asarray([prm.l_new[0, 3], prm.l_new[1, 1]])
+    n_b = np.asarray([prm.n_new[0, 3], prm.n_new[1, 1]])
+    t = l_b + n_b / r
+    e = l_b * np.asarray(prm.p_compute) + (n_b / r) * p_tx
+    w = float(prm.t0) / t
+    assert res["t_task"] == pytest.approx(float((t * w).sum() / w.sum()),
+                                          rel=1e-5)
+    assert res["e_task"] == pytest.approx(float((e * w).sum() / w.sum()),
+                                          rel=1e-5)
