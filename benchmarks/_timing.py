@@ -1,0 +1,109 @@
+"""Shared benchmark timers. Every section that guards a parity ratio
+times through these, so the estimator (and its noise-robustness story) is
+defined exactly once instead of drifting per-benchmark.
+
+``iter_us`` measures ONE jitted MAHPPO iteration in steady state;
+``call_us`` is the generic per-call timer for kernels and other plain
+callables. Both support ``reduce="min"`` — best-of-k is the noise-robust
+estimator for a deterministic workload on a shared box, without paying a
+second compilation the way repeating the whole call would.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def iter_us(env, cfg, n_timed=3, reduce="mean"):
+    """Steady-state wall time of ONE jitted MAHPPO iteration: reuse the
+    same compiled `iteration` for warm-up and timing so compilation is
+    excluded. Honors cfg.shared_policy / cfg.entity_policy /
+    cfg.randomize_pool, so per-UE-actors, weight-shared, and entity-set
+    agents all time through the identical harness."""
+    from repro.optim import adamw_init
+    from repro.rl.mahppo import init_agent, init_states, make_train_fns
+    key = jax.random.PRNGKey(0)
+    agent = init_agent(key, env, shared_policy=cfg.shared_policy,
+                       entity_policy=cfg.entity_policy)
+    opt = adamw_init(agent)
+    states = init_states(env, cfg, key)
+    iteration = make_train_fns(env, cfg)
+    agent, opt, key, states, m = iteration(agent, opt, key, states)
+    jax.block_until_ready(m)                # compile + first run
+    if reduce == "min":
+        best = float("inf")
+        for _ in range(n_timed):
+            t0 = time.time()
+            agent, opt, key, states, m = iteration(agent, opt, key, states)
+            jax.block_until_ready(m)
+            best = min(best, time.time() - t0)
+        return best * 1e6
+    t0 = time.time()
+    for _ in range(n_timed):
+        agent, opt, key, states, m = iteration(agent, opt, key, states)
+    jax.block_until_ready(m)
+    return (time.time() - t0) * 1e6 / n_timed
+
+
+def paired_iter_samples(candidates, n_timed=10):
+    """Per-iteration wall times (seconds) of SEVERAL (env, cfg) MAHPPO
+    iterations with the timed runs INTERLEAVED round by round (A, B, ...,
+    A, B, ...) instead of sequential blocks. Returns an (n_candidates,
+    n_timed) nested list: ``out[i][k]`` is candidate i's time in round k.
+
+    Parity guards should divide PAIRED samples: within one round the
+    candidates run back-to-back, so a load burst inflates both and
+    mostly cancels in the per-round ratio — `paired_ratio` takes the
+    median of those. A min-over-independent-samples ratio, by contrast,
+    is skewed whenever one candidate alone catches a freak quiet (or
+    busy) slice."""
+    from repro.optim import adamw_init
+    from repro.rl.mahppo import init_agent, init_states, make_train_fns
+    runs = []
+    for env, cfg in candidates:
+        key = jax.random.PRNGKey(0)
+        agent = init_agent(key, env, shared_policy=cfg.shared_policy,
+                           entity_policy=cfg.entity_policy)
+        opt = adamw_init(agent)
+        states = init_states(env, cfg, key)
+        iteration = make_train_fns(env, cfg)
+        carry = iteration(agent, opt, key, states)
+        jax.block_until_ready(carry[-1])        # compile + first run
+        runs.append([iteration, carry])
+    times = [[] for _ in runs]
+    for _ in range(n_timed):
+        for i, (iteration, carry) in enumerate(runs):
+            t0 = time.time()
+            carry = iteration(*carry[:4])
+            jax.block_until_ready(carry[-1])
+            runs[i][1] = carry
+            times[i].append(time.time() - t0)
+    return times
+
+
+def paired_ratio(samples_a, samples_b):
+    """Noise-robust parity ratio a/b from two same-length sample lists
+    taken in the same interleaved rounds: median of per-round ratios."""
+    ratios = sorted(a / max(b, 1e-12)
+                    for a, b in zip(samples_a, samples_b))
+    n = len(ratios)
+    mid = n // 2
+    return ratios[mid] if n % 2 else 0.5 * (ratios[mid - 1] + ratios[mid])
+
+
+def call_us(fn, *args, iters=3, reduce="mean"):
+    """Wall time per call of ``fn(*args)`` (us), first call excluded as
+    warm-up/compile. Blocks on whatever pytree the call returns."""
+    jax.block_until_ready(fn(*args))
+    if reduce == "min":
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.time()
+            jax.block_until_ready(fn(*args))
+            best = min(best, time.time() - t0)
+        return best * 1e6
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6

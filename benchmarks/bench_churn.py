@@ -51,9 +51,9 @@ def run(quick=True):
     # mask is data, not structure, so the jitted iteration should stay at
     # parity (the churn env adds 2N obs features + 4 per-step RNG draws).
     try:
-        from benchmarks.bench_hetero_fleet import _iter_us
+        from benchmarks._timing import iter_us as _iter_us
     except ImportError:        # run directly as a script
-        from bench_hetero_fleet import _iter_us
+        from _timing import iter_us as _iter_us
     tcfg = MAHPPOConfig(horizon=512, n_envs=4, reuse=2)
     us_static = _iter_us(make_churn_env(0.0), tcfg)
     us_churn = _iter_us(make_churn_env(0.1), tcfg)

@@ -1,33 +1,36 @@
-"""Fleet-generalist shared policy: train ONCE at N=4, deploy everywhere.
+"""Fleet- and pool-generalist policies: train ONCE at N=4, deploy
+everywhere.
 
 A weight-shared MAHPPO actor (``MAHPPOConfig(shared_policy=True)``) is
 trained on the mixed 4-UE fleet over the 2-server demo pool, then
-evaluated ZERO-SHOT — no retraining, the identical parameter set — on:
+evaluated ZERO-SHOT — no retraining, the identical parameter set — on an
+8-UE and a 16-UE fleet of the same device mix (the per-UE feature rows
+are N-independent, so the actor just sees more rows), each against the
+interference-oblivious greedy heuristic scored on that same scenario,
+plus per-UE actors trained from scratch at N=4 as the paper-style
+reference. Param counts are reported at N=4/8/16: the shared actor is
+O(1) in the fleet size where per-UE actors grow linearly — the scaling
+property the north-star "millions of users" needs.
 
-* an 8-UE and a 16-UE fleet of the same device mix (the per-UE feature
-  rows are N-independent, so the actor just sees more rows), and
-* a different 2-server pool LAYOUT (the v5e still primary but
-  bandwidth-starved, the GPU tier moved in much closer),
+The ENTITY policy (``MAHPPOConfig(entity_policy=True,
+randomize_pool=True)``) closes the gap the shared policy's mean-field
+pool aggregates honestly reported as a LOSS through PR 4: trained on
+RANDOMIZED 2-server geometries (each episode draws every server's
+[dist_scale, bw_scale, slowness], so the route head actually receives
+pool-feature gradients), its shared per-server route scorer is evaluated
+zero-shot on
 
-each against the interference-oblivious greedy heuristic scored on that
-same scenario, plus per-UE actors trained from scratch at N=4 as the
-paper-style reference. Param counts are reported at N=4/8/16: the shared
-actor is O(1) in the fleet size where per-UE actors grow linearly — the
-scaling property the north-star "millions of users" needs.
+* the inverted alt-pool layout (v5e bandwidth-starved, GPU tier moved
+  in) — previously the reported loss, now a LEDGER-ENFORCED win over
+  nearest-server greedy, and
+* an unseen E=3 pool — a pool SIZE it never trained on (route logits are
+  scored per server, so E is free at inference time), same enforced win.
 
-Expected picture: fleet-SIZE transfer wins (the mean-field aggregates the
-policy conditions on vary during training, so it has learned to respond
-to them), while pool-LAYOUT transfer is a stress probe reported honestly
-— the pool features are constant under single-pool training, so the
-policy gets no gradient signal to condition its route head on them and
-generally cannot beat a layout-aware heuristic zero-shot. Closing that
-gap needs pool randomization during training or per-server route
-encoders (see the ROADMAP PR-4 follow-ups); the scenario is here so the
-number is tracked rather than assumed.
-
-Parity guard: the jitted shared-policy iteration must cost no more than
+Parity guards: the jitted shared-policy iteration must cost no more than
 the per-UE-actors iteration at N=4 (limit 1.0x — one small actor applied
-N times does strictly less optimizer work than N actors).
+N times does strictly less optimizer work than N actors), and the entity
+iteration at most ENTITY_PARITY_LIMIT x the shared one (the pair scorer
+adds an (N, E) MLP sweep).
 """
 from __future__ import annotations
 
@@ -35,9 +38,11 @@ import dataclasses
 import time
 
 from repro.core import overhead as oh
-from repro.core.fleets import EdgePool, make_edge_pool, make_mixed_fleet
+from repro.core.fleets import (EdgePool, make_edge_pool, make_mixed_fleet,
+                               random_pool_ranges)
 from repro.env.mecenv import MECEnv, make_env_params
 from repro.rl import nets
+from repro.rl.baselines import nearest_server_eval
 from repro.rl.heuristics import greedy_eval
 from repro.rl.mahppo import (MAHPPOConfig, evaluate_policy, init_agent,
                              train_mahppo)
@@ -45,9 +50,11 @@ from repro.rl.mahppo import (MAHPPOConfig, evaluate_policy, init_agent,
 import jax
 
 PARITY_LIMIT = 1.0
+ENTITY_PARITY_LIMIT = 1.25
 # wall-clock ratios on shared CI runners are noisy; the smoke gate only
 # guards gross regressions
 PARITY_LIMIT_SMOKE = 1.3
+ENTITY_PARITY_LIMIT_SMOKE = 1.6
 TRAIN_N = 4
 EVAL_NS = (8, 16)
 
@@ -64,10 +71,13 @@ def alt_pool() -> EdgePool:
                                                   dist_scale=1.2)))
 
 
-def make_gen_env(n_ue: int, pool: EdgePool = None) -> MECEnv:
+def make_gen_env(n_ue: int, pool: EdgePool = None,
+                 randomized: bool = False) -> MECEnv:
     fleet = make_mixed_fleet(n_ue=n_ue)
-    return MECEnv(make_env_params(fleet, n_channels=2,
-                                  pool=pool or make_edge_pool(2)))
+    pool = pool or make_edge_pool(2)
+    ranges = random_pool_ranges(pool.n_servers) if randomized else None
+    return MECEnv(make_env_params(fleet, n_channels=2, pool=pool,
+                                  pool_ranges=ranges))
 
 
 def _overhead(env, ev):
@@ -85,6 +95,15 @@ def run(quick=True, smoke=False):
     train_s = time.time() - t0
     per_ue, _ = train_mahppo(
         env4, dataclasses.replace(cfg, shared_policy=False), seed=0)
+
+    # the pool-generalist entity policy: same fleet, same pool STRUCTURE,
+    # but every training episode draws a fresh 2-server geometry
+    env_rnd = make_gen_env(TRAIN_N, randomized=True)
+    ecfg = dataclasses.replace(cfg, entity_policy=True, shared_policy=False,
+                               randomize_pool=True)
+    t0 = time.time()
+    entity, _ = train_mahppo(env_rnd, ecfg, seed=0)
+    entity_train_s = time.time() - t0
 
     scenarios = [("n4_train", env4),
                  ("n8_zero_shot", make_gen_env(EVAL_NS[0])),
@@ -104,6 +123,27 @@ def run(quick=True, smoke=False):
             row["per_ue_overhead"] = _overhead(env, evp)
         rows.append(row)
 
+    # entity zero-shot: the inverted alt-pool layout (the probe PR 4 could
+    # only report as a loss) and an UNSEEN pool size E=3. Scored against
+    # nearest-server greedy — the routing-oblivious deployment default —
+    # and full (split, server)-greedy for context.
+    entity_rows = []
+    for name, env in [
+            ("entity_alt_pool_zero_shot", make_gen_env(TRAIN_N, alt_pool())),
+            ("entity_e3_zero_shot",
+             make_gen_env(TRAIN_N, make_edge_pool(3)))]:
+        ev = evaluate_policy(env, entity, frames=64)
+        near = nearest_server_eval(env)
+        gr = greedy_eval(env)
+        entity_rows.append({
+            "scenario": name, "n_ue": int(env.params.n_ue),
+            "n_servers": env.n_servers,
+            "entity_overhead": _overhead(env, ev),
+            "entity_t_task": ev["t_task"], "entity_e_task": ev["e_task"],
+            "nearest_overhead": near["overhead"],
+            "greedy_overhead": gr["overhead"],
+            "beats_nearest": bool(_overhead(env, ev) <= near["overhead"])})
+
     # parameter scaling: shared is O(1) in N, per-UE actors are O(N)
     params = {"shared": nets.param_count(shared["actor"]), "per_ue": {}}
     for name, env in scenarios[:3]:
@@ -111,44 +151,86 @@ def run(quick=True, smoke=False):
         params["per_ue"][int(env.params.n_ue)] = \
             nets.param_count(pu["actors"])
 
-    # hot-path parity: shared vs per-UE-actors jitted iteration at N=4.
-    # Wall-clock on a shared box is noisy, so each mode reports its
-    # best-of-k single-iteration time (one compilation per mode).
+    # hot-path parity: shared vs per-UE-actors jitted iteration at N=4,
+    # and entity vs shared — all timed at the section's ACTUAL training
+    # configuration (horizon 512, reuse 4) so the ratio reflects what a
+    # training run pays, with the entity policy on the SAME static env4
+    # as the other two (isolating the policy-architecture cost; the
+    # randomized-geometry variant is timed and reported alongside).
+    # Wall-clock on a shared box is noisy, so the modes are timed
+    # round-robin INTERLEAVED (one compilation per mode) and each parity
+    # ratio is the MEDIAN of per-round paired ratios — a load burst
+    # inflates the whole round and cancels, where a min-of-independent-
+    # samples ratio flips whenever one mode alone catches a freak quiet
+    # slice.
     try:
-        from benchmarks.bench_hetero_fleet import _iter_us
+        from benchmarks._timing import paired_iter_samples, paired_ratio
     except ImportError:        # run directly as a script
-        from bench_hetero_fleet import _iter_us
-    tcfg = MAHPPOConfig(horizon=512, n_envs=4, reuse=2)
+        from _timing import paired_iter_samples, paired_ratio
+    tcfg = MAHPPOConfig(horizon=512, n_envs=4, reuse=4)
     scfg = dataclasses.replace(tcfg, shared_policy=True)
-    us_per_ue = _iter_us(env4, tcfg, n_timed=10, reduce="min")
-    us_shared = _iter_us(env4, scfg, n_timed=10, reduce="min")
-    ratio = us_shared / max(us_per_ue, 1e-9)
+    etcfg = dataclasses.replace(tcfg, entity_policy=True)
+    ercfg = dataclasses.replace(tcfg, entity_policy=True,
+                                randomize_pool=True)
+    t_per_ue, t_shared, t_entity, t_entity_rnd = paired_iter_samples(
+        [(env4, tcfg), (env4, scfg), (env4, etcfg), (env_rnd, ercfg)],
+        n_timed=15)
+    us_per_ue, us_shared, us_entity = (min(t_per_ue) * 1e6,
+                                       min(t_shared) * 1e6,
+                                       min(t_entity) * 1e6)
+    us_entity_rnd = min(t_entity_rnd) * 1e6
+    ratio = paired_ratio(t_shared, t_per_ue)
+    entity_ratio = paired_ratio(t_entity, t_shared)
     limit = PARITY_LIMIT_SMOKE if smoke else PARITY_LIMIT
+    entity_limit = ENTITY_PARITY_LIMIT_SMOKE if smoke \
+        else ENTITY_PARITY_LIMIT
 
-    # the acceptance gate is fleet-SIZE transfer (n8/n16); the alt-pool
-    # probe is reported but not gated (see module docstring). The gate is
-    # ENFORCED through the same ledger as the parity guard — a zero-shot
-    # regression must fail the run, not scroll past as a False — phrased
-    # as a ratio so the harness treats it uniformly: shared/greedy ≤ 1.0.
+    # zero-shot acceptance gates, ENFORCED through the same ledger as the
+    # parity guard — a regression must fail the run, not scroll past as a
+    # False — phrased as ratios so the harness treats them uniformly:
+    #  * fleet-SIZE transfer: shared/greedy ≤ 1.0 at n8/n16 (as in PR 4)
+    #  * pool transfer: entity/nearest ≤ 1.0 on the inverted alt-pool
+    #    layout AND the unseen E=3 pool — the probe PR 4 reported as a
+    #    loss, flipped to an enforced win by randomized-pool training
     gates = [{"name": f"{r['scenario']}_vs_greedy",
               "ratio": r["shared_overhead"] / max(r["greedy_overhead"],
                                                   1e-9),
               "limit": 1.0}
              for r in rows if r["scenario"].startswith("n")
              and r["scenario"].endswith("_zero_shot")]
-    zero_shot_ok = all(g["ratio"] <= g["limit"] for g in gates)
+    # smoke runs train 3 iterations: the entity wins still hold by a wide
+    # margin empirically (ratios ~0.25-0.35 — nearest-server is a LOW
+    # bar), but a barely-trained route head shouldn't gate at exactly
+    # 1.0, so CI smoke keeps a collapse guard while quick/full enforce
+    # the true win (mirrors the *_SMOKE parity limits)
+    zs_limit = 1.25 if smoke else 1.0
+    gates += [{"name": f"{r['scenario']}_vs_nearest",
+               "ratio": r["entity_overhead"] / max(r["nearest_overhead"],
+                                                   1e-9),
+               "limit": zs_limit}
+              for r in entity_rows]
+    # the reported "beats" flag stays strict (<= 1.0) even where a smoke
+    # gate's enforcement limit is looser
+    zero_shot_ok = all(g["ratio"] <= 1.0 for g in gates)
     # "sublinear in N": deploying at 4x the fleet size leaves the shared
     # actor's size unchanged while per-UE actors grow 4x
     per_ue_counts = [params["per_ue"][n] for n in (TRAIN_N,) + EVAL_NS]
-    return {"rows": rows, "train_s": train_s, "params": params,
+    params["entity"] = nets.param_count(entity["entity_actor"])
+    return {"rows": rows, "entity_rows": entity_rows, "train_s": train_s,
+            "entity_train_s": entity_train_s, "params": params,
             "param_sublinear": bool(
                 params["shared"] < per_ue_counts[0]
                 and per_ue_counts[0] < per_ue_counts[1] < per_ue_counts[2]),
             "zero_shot_beats_greedy": zero_shot_ok,
             "iter_us_per_ue": us_per_ue, "iter_us_shared": us_shared,
-            "iter_ratio": ratio,
+            "iter_us_entity": us_entity,
+            "iter_us_entity_randomized": us_entity_rnd,
+            "iter_ratio": ratio, "entity_iter_ratio": entity_ratio,
             "parity": [{"name": "shared_vs_per_ue_iteration",
-                        "ratio": ratio, "limit": limit}] + gates}
+                        "ratio": ratio, "limit": limit},
+                       {"name": "entity_vs_shared_iteration",
+                        "ratio": entity_ratio, "limit": entity_limit}]
+            + gates}
 
 
 if __name__ == "__main__":
@@ -160,9 +242,19 @@ if __name__ == "__main__":
               f"shared {r['shared_overhead']:.4f} vs greedy "
               f"{r['greedy_overhead']:.4f}"
               f" [{'BEATS' if r['beats_greedy'] else 'LOSES'}]{extra}")
+    for r in out["entity_rows"]:
+        print(f"{r['scenario']:>26s} (E={r['n_servers']}): "
+              f"entity {r['entity_overhead']:.4f} vs nearest "
+              f"{r['nearest_overhead']:.4f} (greedy "
+              f"{r['greedy_overhead']:.4f}) "
+              f"[{'BEATS' if r['beats_nearest'] else 'LOSES'}]")
     p = out["params"]
-    print(f"actor params: shared {p['shared']} (constant in N); per-UE "
+    print(f"actor params: shared {p['shared']}, entity {p['entity']} "
+          "(both constant in N); per-UE "
           + ", ".join(f"N={n}: {c}" for n, c in sorted(p["per_ue"].items())))
     print(f"iteration: per-UE {out['iter_us_per_ue']/1e3:.1f} ms, shared "
           f"{out['iter_us_shared']/1e3:.1f} ms "
-          f"(ratio {out['iter_ratio']:.2f}, limit {PARITY_LIMIT})")
+          f"(ratio {out['iter_ratio']:.2f}, limit {PARITY_LIMIT}), entity "
+          f"{out['iter_us_entity']/1e3:.1f} ms "
+          f"(ratio {out['entity_iter_ratio']:.2f}, "
+          f"limit {ENTITY_PARITY_LIMIT})")

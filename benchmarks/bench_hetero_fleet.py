@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import time
 
-import jax
 import numpy as np
 
 from repro.core.fleets import make_mixed_fleet
@@ -18,39 +17,12 @@ from repro.core.split import cnn_split_table, homogeneous_fleet
 from repro.env.mecenv import MECEnv, make_env_params
 from repro.rl.baselines import local_policy_eval, random_policy_eval
 from repro.rl.heuristics import greedy_eval
-from repro.rl.mahppo import (MAHPPOConfig, evaluate_policy, init_agent,
-                             make_train_fns, train_mahppo)
+from repro.rl.mahppo import MAHPPOConfig, evaluate_policy, train_mahppo
 
-
-def _iter_us(env, cfg, n_timed=3, reduce="mean"):
-    """Steady-state wall time of ONE jitted MAHPPO iteration: reuse the same
-    compiled `iteration` for warm-up and timing so compilation is excluded.
-    Honors cfg.shared_policy, so per-UE-actors and weight-shared agents
-    time through the identical harness. ``reduce="min"`` times each
-    iteration separately and reports the best — the noise-robust estimator
-    for a deterministic workload on a shared box, without paying a second
-    compilation the way repeating the whole call would."""
-    from repro.optim import adamw_init
-    key = jax.random.PRNGKey(0)
-    agent = init_agent(key, env, shared_policy=cfg.shared_policy)
-    opt = adamw_init(agent)
-    states = jax.vmap(env.reset)(jax.random.split(key, cfg.n_envs))
-    iteration = make_train_fns(env, cfg)
-    agent, opt, key, states, m = iteration(agent, opt, key, states)
-    jax.block_until_ready(m)                # compile + first run
-    if reduce == "min":
-        best = float("inf")
-        for _ in range(n_timed):
-            t0 = time.time()
-            agent, opt, key, states, m = iteration(agent, opt, key, states)
-            jax.block_until_ready(m)
-            best = min(best, time.time() - t0)
-        return best * 1e6
-    t0 = time.time()
-    for _ in range(n_timed):
-        agent, opt, key, states, m = iteration(agent, opt, key, states)
-    jax.block_until_ready(m)
-    return (time.time() - t0) * 1e6 / n_timed
+try:
+    from benchmarks._timing import iter_us as _iter_us
+except ImportError:        # run directly as a script
+    from _timing import iter_us as _iter_us
 
 
 def run(quick=True):

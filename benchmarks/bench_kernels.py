@@ -3,22 +3,16 @@ numbers are correctness-path timings, not TPU perf; TPU perf comes from the
 roofline terms) plus the compressor's analytic TPU-side cost."""
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
 
-
-def _time(fn, *args, iters=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
-    t0 = time.time()
-    for _ in range(iters):
-        jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / iters * 1e6  # us
+try:
+    from benchmarks._timing import call_us as _time
+except ImportError:        # run directly as a script
+    from _timing import call_us as _time
 
 
 def run():

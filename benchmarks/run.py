@@ -8,8 +8,11 @@ multi_server, generalization) report it into a shared ledger; any ratio
 above its limit makes the run EXIT NONZERO with a summary line, so CI
 catches hot-path regressions instead of scrolling past them. ``--smoke``
 runs the RL sections at tiny iteration counts (CI-sized) and still emits
-the standardized ``artifacts/BENCH_multi_server.json`` and
-``artifacts/BENCH_generalization.json`` artifacts.
+the standardized ``artifacts/BENCH_multi_server.json``,
+``artifacts/BENCH_generalization.json`` and ``artifacts/BENCH_entity.json``
+artifacts. The generalization ledger also enforces the zero-shot WINS:
+shared/greedy at n8/n16, and the entity policy vs nearest-server greedy
+on the inverted alt-pool layout and an unseen E=3 pool.
 """
 from __future__ import annotations
 
@@ -199,15 +202,28 @@ def main() -> None:
               f"beats_nearest={out['beats_nearest']}")
         for p in out["parity"]:
             guard("multi_server", p["name"], p["ratio"], p["limit"])
+        # routing under churn: sparse membership vs flash crowd
+        churn_out = bench_multi_server.run_churn_routing(quick=quick,
+                                                         smoke=smoke)
+        results["multi_server_churn_routing"] = churn_out
+        _emit("multi_server_churn_routing", 0.0,
+              f"sparse_share={churn_out['sparse']['max_share']:.2f};"
+              f"flash_share={churn_out['flash']['max_share']:.2f};"
+              f"flash_counts="
+              f"{''.join(map(str, churn_out['flash']['counts']))};"
+              f"rebalances={churn_out['rebalances']}")
+        for p in churn_out["parity"]:
+            guard("multi_server", p["name"], p["ratio"], p["limit"])
         os.makedirs("artifacts", exist_ok=True)
-        artifact = {"bench": "multi_server", "schema": 1,
+        artifact = {"bench": "multi_server", "schema": 2,
                     "smoke": smoke, "quick": quick,
                     "rows": out["rows"],
                     "beats_nearest": out["beats_nearest"],
                     "iter_us_single": out["iter_us_single"],
                     "iter_us_multi": out["iter_us_multi"],
                     "iter_ratio": out["iter_ratio"],
-                    "parity": out["parity"]}
+                    "churn_routing": churn_out,
+                    "parity": out["parity"] + churn_out["parity"]}
         with open("artifacts/BENCH_multi_server.json", "w") as f:
             json.dump(artifact, f, indent=1, default=float)
         print("# wrote artifacts/BENCH_multi_server.json", flush=True)
@@ -226,20 +242,29 @@ def main() -> None:
                   f"beats_greedy={r['beats_greedy']}"
                   + (f";per_ue={r['per_ue_overhead']:.4f}"
                      if "per_ue_overhead" in r else ""))
+        for r in out["entity_rows"]:
+            _emit(f"generalization_{r['scenario']}", 0.0,
+                  f"n_servers={r['n_servers']};"
+                  f"entity={r['entity_overhead']:.4f};"
+                  f"nearest={r['nearest_overhead']:.4f};"
+                  f"greedy={r['greedy_overhead']:.4f};"
+                  f"beats_nearest={r['beats_nearest']}")
         p = out["params"]
         _emit("generalization_params", 0.0,
-              f"shared={p['shared']};"
+              f"shared={p['shared']};entity={p['entity']};"
               + ";".join(f"per_ue_n{n}={c}"
                          for n, c in sorted(p["per_ue"].items()))
               + f";sublinear={out['param_sublinear']}")
         _emit("generalization_iter_us", out["iter_us_shared"],
               f"per_ue_us={out['iter_us_per_ue']:.0f};"
+              f"entity_us={out['iter_us_entity']:.0f};"
               f"ratio={out['iter_ratio']:.2f};"
+              f"entity_ratio={out['entity_iter_ratio']:.2f};"
               f"zero_shot_beats_greedy={out['zero_shot_beats_greedy']}")
         for pc in out["parity"]:
             guard("generalization", pc["name"], pc["ratio"], pc["limit"])
         os.makedirs("artifacts", exist_ok=True)
-        artifact = {"bench": "generalization", "schema": 1,
+        artifact = {"bench": "generalization", "schema": 2,
                     "smoke": smoke, "quick": quick,
                     "rows": out["rows"], "params": out["params"],
                     "param_sublinear": out["param_sublinear"],
@@ -252,6 +277,22 @@ def main() -> None:
         with open("artifacts/BENCH_generalization.json", "w") as f:
             json.dump(artifact, f, indent=1, default=float)
         print("# wrote artifacts/BENCH_generalization.json", flush=True)
+        # standalone entity-policy artifact: the pool-transfer story
+        # (alt-pool + unseen-E wins, scorer parity) in one place
+        entity_artifact = {
+            "bench": "entity", "schema": 1, "smoke": smoke, "quick": quick,
+            "rows": out["entity_rows"],
+            "entity_params": p["entity"],
+            "entity_train_s": out["entity_train_s"],
+            "iter_us_shared": out["iter_us_shared"],
+            "iter_us_entity": out["iter_us_entity"],
+            "iter_us_entity_randomized": out["iter_us_entity_randomized"],
+            "entity_iter_ratio": out["entity_iter_ratio"],
+            "parity": [g for g in out["parity"]
+                       if g["name"].startswith("entity")]}
+        with open("artifacts/BENCH_entity.json", "w") as f:
+            json.dump(entity_artifact, f, indent=1, default=float)
+        print("# wrote artifacts/BENCH_entity.json", flush=True)
 
     if want("archs"):
         _section("fig13 other backbones (+ assigned archs)")

@@ -33,6 +33,17 @@ trained agent evaluates zero-shot on other fleet sizes and pool layouts
 
   PYTHONPATH=src python examples/collaborative_serve.py --shared-policy \\
       --servers 2
+
+With ``--entity-policy`` the policy consumes the structured ENTITY-SET
+observation (``env.observe_entities``: per-UE rows, per-server rows, and
+UE x server edge features) and scores every (UE, server) pair with one
+shared route scorer. Training resamples the pool geometry every episode
+(the route head actually learns to read the pool), and the SAME
+parameters then run zero-shot on a pool of a different SIZE — the demo
+finishes by dropping the trained agent onto an E+1-server pool:
+
+  PYTHONPATH=src python examples/collaborative_serve.py --entity-policy \\
+      --servers 2
 """
 import argparse
 
@@ -88,7 +99,8 @@ def run_split_forward(params, cfg, tokens, split_layer, ae, bits=8):
 
 
 def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
-                   leave_rate=0.0, n_servers=1, shared_policy=False):
+                   leave_rate=0.0, n_servers=1, shared_policy=False,
+                   entity_policy=False):
     """Mixed-fleet scheduling: per-UE split tables + device tiers end-to-end
     through MAHPPO, vs the non-coordinating greedy heuristic. With nonzero
     churn/leave rates the fleet is DYNAMIC: UEs join from a standby pool and
@@ -98,7 +110,8 @@ def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
     feature rows (`env.observe_per_ue`) replaces the N per-UE actors —
     O(1) parameters in the fleet size, and the trained agent transfers
     zero-shot to other fleet sizes (see benchmarks/bench_generalization.py)."""
-    from repro.core.fleets import make_edge_pool, make_mixed_fleet
+    from repro.core.fleets import (make_edge_pool, make_mixed_fleet,
+                                   random_pool_ranges)
     from repro.env.mecenv import MECEnv, make_env_params
     from repro.rl import nets
     from repro.rl.heuristics import greedy_eval
@@ -119,9 +132,12 @@ def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
                   f"bw x{srv.bw_scale:.1f}  "
                   f"edge_speed={srv.edge_speed/1e12:.1f} TFLOP/s")
 
-    env = MECEnv(make_env_params(fleet, n_channels=2,
-                                 churn_rate=churn_rate,
-                                 leave_rate=leave_rate, pool=pool))
+    randomize = entity_policy and pool is not None
+    env = MECEnv(make_env_params(
+        fleet, n_channels=2, churn_rate=churn_rate,
+        leave_rate=leave_rate, pool=pool,
+        pool_ranges=random_pool_ranges(pool.n_servers) if randomize
+        else None))
     print(f"action space: {', '.join(env.action_space.names)}")
     demo_active = None         # representative membership for the baselines
     if env.dynamic:
@@ -149,11 +165,15 @@ def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
         for t, row in enumerate(trace):
             if t % 4 == 0:
                 print(f"    frame {t:2d}: {row}")
-    mode = "weight-shared actor" if shared_policy else "per-UE actors"
-    print(f"\ntraining MAHPPO ({mode}) on the mixed fleet "
+    mode = "entity-set actor, per-server route scorer" if entity_policy \
+        else "weight-shared actor" if shared_policy else "per-UE actors"
+    extra = " over randomized pool geometries" if randomize else ""
+    print(f"\ntraining MAHPPO ({mode}) on the mixed fleet{extra} "
           f"({iterations} iterations)...")
     cfg = MAHPPOConfig(iterations=iterations, horizon=512, n_envs=4,
-                       reuse=4, shared_policy=shared_policy)
+                       reuse=4, shared_policy=shared_policy,
+                       entity_policy=entity_policy,
+                       randomize_pool=randomize)
     agent, hist = train_mahppo(env, cfg, seed=0,
                                log_cb=lambda r: print(
                                    f"  iter {r['iteration']:3d} "
@@ -185,13 +205,16 @@ def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
         print(f"loadbal: overhead {load['overhead']:.4f}  "
               f"(route={load['route']})")
 
-    if shared_policy:
+    if shared_policy or entity_policy:
         from repro.rl.mahppo import init_agent
-        n_shared = nets.param_count(agent["actor"])
+        n_pol = nets.param_count(agent.get("actor")
+                                 or agent["entity_actor"])
         n_per_ue = nets.param_count(
             init_agent(jax.random.PRNGKey(0), env)["actors"])
-        print(f"\nactor parameters: {n_shared} shared (O(1) in fleet "
-              f"size) vs {n_per_ue} for per-UE actors at N="
+        kind = "entity" if entity_policy else "shared"
+        print(f"\nactor parameters: {n_pol} {kind} (O(1) in fleet size"
+              + (" AND pool size" if entity_policy else "")
+              + f") vs {n_per_ue} for per-UE actors at N="
               f"{env.params.n_ue}")
 
     # learned per-UE decisions at the eval state
@@ -199,7 +222,11 @@ def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
     space = env.action_space
     s = env.reset(jax.random.PRNGKey(0), eval_mode=True)
     masks = env.action_masks()
-    if shared_policy:
+    if entity_policy:
+        dist = nets.entity_actor_forward(
+            agent["entity_actor"], space, env.observe_entities(s),
+            space.broadcast_masks(masks, env.params.n_ue))
+    elif shared_policy:
         dist = nets.shared_actor_forward(
             agent["actor"], space, env.observe_per_ue(s),
             space.broadcast_masks(masks, env.params.n_ue))
@@ -217,6 +244,20 @@ def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
                              minlength=env.n_servers)
         print(f"  learned route distribution: "
               + ", ".join(f"srv{e}={int(c)}" for e, c in enumerate(counts)))
+
+    # entity policies transfer across pool SIZE: drop the identical
+    # parameters onto an E+1-server pool, zero-shot
+    if entity_policy and env.multi_server and n_servers < 3:
+        from repro.rl.baselines import nearest_server_eval
+        env_big = MECEnv(make_env_params(
+            fleet, n_channels=2, pool=make_edge_pool(n_servers + 1)))
+        ev_big = evaluate_policy(env_big, agent, frames=64)
+        near_big = nearest_server_eval(env_big)
+        ovh_big = ev_big["t_task"] + beta * ev_big["e_task"]
+        print(f"\nzero-shot on an UNSEEN {n_servers + 1}-server pool "
+              f"(route head is E-free): entity overhead {ovh_big:.4f} vs "
+              f"nearest-server {near_big['overhead']:.4f} "
+              f"[{'BEATS' if ovh_big <= near_big['overhead'] else 'LOSES'}]")
 
 
 def main():
@@ -247,19 +288,32 @@ def main():
                          "feature rows instead of per-UE actors — O(1) "
                          "parameters in the fleet size, transfers "
                          "zero-shot across fleets (implies --fleet)")
+    ap.add_argument("--entity-policy", action="store_true",
+                    help="train the entity-set policy: structured "
+                         "{ue, server, edge} observations through a "
+                         "shared per-server route scorer, with the pool "
+                         "geometry resampled every episode — transfers "
+                         "zero-shot across pool layouts AND sizes "
+                         "(implies --fleet; defaults --servers to 2)")
     ap.add_argument("--iterations", type=int, default=15)
     args = ap.parse_args()
 
+    if args.entity_policy and args.shared_policy:
+        ap.error("pick one of --entity-policy / --shared-policy")
+    if args.entity_policy and args.servers < 2:
+        args.servers = 2       # the route scorer needs a pool to score
     churn = (args.churn or args.churn_rate is not None
              or args.leave_rate is not None)
-    if args.fleet or churn or args.servers > 1 or args.shared_policy:
+    if args.fleet or churn or args.servers > 1 or args.shared_policy \
+            or args.entity_policy:
         run_fleet_demo(
             args.arch, args.iterations,
             churn_rate=(0.2 if args.churn_rate is None
                         else args.churn_rate) if churn else 0.0,
             leave_rate=(0.1 if args.leave_rate is None
                         else args.leave_rate) if churn else 0.0,
-            n_servers=args.servers, shared_policy=args.shared_policy)
+            n_servers=args.servers, shared_policy=args.shared_policy,
+            entity_policy=args.entity_policy)
         return
 
     cfg = reduced(get_config(args.arch), n_layers=4)

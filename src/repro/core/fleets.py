@@ -46,6 +46,8 @@ P_COMPUTE_NORM = 5.0        # W; spans the IoT (0.8) .. phone-NPU (3.0) tiers
 OMEGA_NORM = 1e6            # Hz; the paper's per-channel bandwidth
 BITS_NORM = 1e6             # bits; same scale `observe` uses for s.n
 DIST_NORM = 100.0           # m; same scale `observe` uses for s.d
+EDGE_SLOW_NORM = 1e-12      # s/FLOP; edge tiers span 0 (instant) .. 4.2e-12
+RATE_NORM = 1e7             # b/s; a clean 50 m channel at p_max is ~1.2e7
 
 
 def ue_table_features(l_new, n_new, feasible, p_compute, t0):
@@ -85,6 +87,66 @@ def pool_aggregate_features(server_dist, omega, t_edge, feasible, t0):
         te_mean = float(te[feas].mean() / float(t0))
     return np.array([dist.min(), dist.mean(), om.mean() / OMEGA_NORM,
                      te_mean], np.float32)
+
+
+# --------------------------------------------- per-server feature builders
+# Entity-set observations (env.observe_entities) describe each server by its
+# GEOMETRY triple [dist_scale, bw_scale, slowness] — the three degrees of
+# freedom a ServerProfile adds over the paper's fixed cell-center server.
+# Slowness is 1 / edge_speed (seconds per FLOP; 0 = the paper's instant
+# edge): the edge service time is LINEAR in it, so uniform geometry draws
+# span instant .. weakest-tier service times smoothly instead of blowing up
+# near zero speed. Geometry is data, not structure: the same (E, 3) array
+# format is served statically from an EdgePool or resampled per episode
+# from ranges, which is what lets one shared per-server route scorer
+# transfer across pool layouts AND pool sizes.
+
+def server_slowness(edge_speed) -> float:
+    """s/FLOP a server devotes to an offloaded task (0 = instant edge)."""
+    return 1.0 / edge_speed if edge_speed > 0 else 0.0
+
+
+def pool_geometry(pool) -> np.ndarray:
+    """(E, 3) [dist_scale, bw_scale, slowness] rows, one per server.
+    ``None`` (or a single paper-default server) yields the degenerate
+    [[1, 1, 0]] geometry — the paper's instantaneous cell-center edge."""
+    if pool is None or pool.is_single_paper_server:
+        return np.array([[1.0, 1.0, 0.0]], np.float32)
+    return np.array([[s.dist_scale, s.bw_scale,
+                      server_slowness(s.edge_speed)]
+                     for s in pool.servers], np.float32)
+
+
+def random_pool_ranges(n_servers: int, *, dist=(0.9, 2.0), bw=(0.5, 1.25),
+                       slow=(0.0, 4.2e-12)):
+    """(low, high) (E, 3) geometry bounds for randomized-pool training:
+    each episode draws every server's [dist_scale, bw_scale, slowness]
+    uniformly from these ranges, so the route head sees pool features that
+    actually VARY (single-pool training leaves them constant — no gradient
+    signal). The defaults cover the demo pools: `make_edge_pool` tiers
+    (dist 1.0/1.4/1.8, bw 1.0/1.0/0.8, slowness 0 / 6.7e-13 / 4.2e-12)
+    and the inverted/bandwidth-starved probe layouts."""
+    low = np.tile(np.array([[dist[0], bw[0], slow[0]]], np.float32),
+                  (n_servers, 1))
+    high = np.tile(np.array([[dist[1], bw[1], slow[1]]], np.float32),
+                   (n_servers, 1))
+    return low, high
+
+
+def ue_edge_work(l_new, feasible, peak_flops):
+    """(N, B_max+2) float64 remaining-FLOPs table of the edge-side tail of
+    each (ue, split): the work a routed server must finish, zeroed on
+    padded slots and on full-local (which never touches the edge).
+    Divided by a server's edge_speed this reproduces the env's t_edge
+    column for that server bit-for-bit — the geometry-resampling path
+    recomputes it on the fly from the drawn speeds."""
+    t_loc = np.asarray(l_new, np.float64)
+    feas = np.asarray(feasible, bool)
+    work = np.maximum(t_loc[:, -1:] - t_loc, 0.0) \
+        * np.asarray(peak_flops, np.float64)[:, None]
+    work[~feas] = 0.0
+    work[:, -1] = 0.0
+    return work
 
 
 # ---------------------------------------------------------------- edge side

@@ -46,6 +46,16 @@ the edge term rate-limits the whole-task throughput of phase 2, which
 dominates whenever queues are deep. A pool of ONE paper-default server
 compiles all of this out: `self.multi_server` is a Python-level flag, so
 the single-server env is bit-for-bit the seed env, PRNG stream included.
+
+Pool GEOMETRY may be resampled per episode (PR 5): an env built with
+``pool_ranges`` supports ``reset(key, randomize=True)``, which draws
+every server's [dist_scale, bw_scale, slowness] uniformly from the
+ranges and stores it as ``EnvState.geom``; physics and the entity-set
+observation (``observe_entities`` — per-UE rows, per-server rows, and
+UE x server edge features for the shared per-server route scorer) then
+follow the drawn geometry, and each auto-reset redraws it. Whether a
+state carries geometry is a pytree-structure (trace-time) property, so
+static-pool envs compile exactly the pre-PR5 graph.
 """
 from __future__ import annotations
 
@@ -56,8 +66,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import overhead as oh
-from repro.core.fleets import (BITS_NORM, DIST_NORM, EdgePool,
-                               pool_aggregate_features, ue_table_features)
+from repro.core.fleets import (BITS_NORM, DIST_NORM, EDGE_SLOW_NORM,
+                               RATE_NORM, EdgePool, pool_aggregate_features,
+                               pool_geometry, ue_edge_work,
+                               ue_table_features)
 from repro.core.split import FleetPlan, SplitPlan
 from repro.env.channel import channel_gain, uplink_rates
 from repro.rl.actionspace import (ContinuousHead, DiscreteHead,
@@ -83,6 +95,13 @@ class EnvParams(NamedTuple):
     leave_rate: jnp.ndarray = jnp.float32(0.0)  # per-frame departure prob
     server_dist: Optional[jnp.ndarray] = None   # (E,) distance scale per server
     t_edge: Optional[jnp.ndarray] = None        # (N, B_max+2, E) edge seconds
+    # entity-set observation / geometry-resampling support (PR 5). All are
+    # derivable constants: the default paths above stay bit-for-bit theirs.
+    pool_geom: Optional[jnp.ndarray] = None     # (E, 3) [dist, bw, slowness]
+    omega_cell: Optional[jnp.ndarray] = None    # (C,) base channel bandwidth
+    edge_work: Optional[jnp.ndarray] = None     # (N, B_max+2) edge-tail FLOPs
+    pool_low: Optional[jnp.ndarray] = None      # (E, 3) resample range low
+    pool_high: Optional[jnp.ndarray] = None     # (E, 3) resample range high
 
 
 # per-UE featurized observation layout (see MECEnv.observe_per_ue): the
@@ -96,6 +115,16 @@ OBS_UE_POOL = 4             # static edge-pool aggregate (fleets.py)
 OBS_UE_FLEET = 4            # mean-field fleet aggregates
 OBS_UE_DIM = OBS_UE_OWN + OBS_UE_ACT + OBS_UE_DEVICE + OBS_UE_POOL \
     + OBS_UE_FLEET
+
+# entity-set observation layout (see MECEnv.observe_entities): per-UE rows
+# drop the flattened pool aggregate (servers are first-class entities now),
+# servers carry their geometry + occupancy, and UE x server edges carry the
+# pairwise physics a route scorer needs. Every dimension is a CONSTANT —
+# independent of N AND E — so one shared per-server scorer transfers across
+# fleet sizes, pool layouts, and pool SIZES.
+OBS_ENT_UE = OBS_UE_OWN + OBS_UE_ACT + OBS_UE_DEVICE + OBS_UE_FLEET
+OBS_ENT_SRV = 4             # dist scale, bw scale, slowness, UEs per slot
+OBS_ENT_EDGE = 3            # distance, clean-rate proxy, edge-service time
 
 
 def per_ue(table: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
@@ -127,7 +156,8 @@ def make_env_params(plan: Union[SplitPlan, FleetPlan], *, n_ue=5,
                     omega=1e6, sigma=1e-9, p_max=0.5, lam_tasks=200.0,
                     d_low=1.0, d_high=100.0, pathloss=3.0,
                     churn_rate=0.0, leave_rate=0.0,
-                    pool: Optional[EdgePool] = None) -> EnvParams:
+                    pool: Optional[EdgePool] = None,
+                    pool_ranges=None) -> EnvParams:
     """A single SplitPlan is broadcast to n_ue identical UEs (the seed
     homogeneous scenario); a FleetPlan supplies per-UE tables and device
     power draws (n_ue/p_compute then come from the fleet). Nonzero
@@ -135,7 +165,15 @@ def make_env_params(plan: Union[SplitPlan, FleetPlan], *, n_ue=5,
     than one server (or one non-default server) makes the edge side
     heterogeneous with a routed action space (see module docstring). A
     pool of one paper-default server builds EXACTLY the single-server
-    params, bit-for-bit."""
+    params, bit-for-bit.
+
+    ``pool_ranges`` — a ``(low, high)`` pair of (E, 3) geometry bounds
+    (see ``core.fleets.random_pool_ranges``) — makes the pool geometry
+    RESAMPLABLE: ``env.reset(key, randomize=True)`` draws each server's
+    [dist_scale, bw_scale, slowness] uniformly from the ranges and the
+    episode's physics and entity observations follow the drawn geometry.
+    Requires a multi-server pool; the default (non-randomized) reset and
+    every existing code path are unaffected."""
     if isinstance(plan, FleetPlan):
         n_ue = plan.n_ue
         l_new = jnp.asarray(plan.t_local + plan.t_comp, jnp.float32)
@@ -152,7 +190,11 @@ def make_env_params(plan: Union[SplitPlan, FleetPlan], *, n_ue=5,
         p_vec = jnp.full((n_ue,), 2.1 if p_compute is None else p_compute,
                          jnp.float32)
 
+    t_loc, feas_np, peaks = _ue_tables(plan, n_ue)
+    work = ue_edge_work(t_loc, feas_np, peaks)       # (N, B+2) float64
     if pool is None or pool.is_single_paper_server:
+        if pool_ranges is not None:
+            raise ValueError("pool_ranges needs a multi-server EdgePool")
         omega_t = jnp.full((n_channels,), omega, jnp.float32)
         sigma_t = jnp.full((n_channels,), sigma, jnp.float32)
         server_dist = t_edge = None
@@ -163,13 +205,19 @@ def make_env_params(plan: Union[SplitPlan, FleetPlan], *, n_ue=5,
         sigma_t = jnp.full((pool.n_servers, n_channels), sigma, jnp.float32)
         server_dist = jnp.asarray([s.dist_scale for s in pool.servers],
                                   jnp.float32)
-        t_loc, feas_np, peaks = _ue_tables(plan, n_ue)
         speed = np.array([s.edge_speed for s in pool.servers])
-        work = np.maximum(t_loc[:, -1:] - t_loc, 0.0) * peaks[:, None]
         te = work[:, :, None] / np.where(speed > 0, speed, np.inf)
-        te[~feas_np] = 0.0        # padded slots stay inert (t_task == 0)
-        te[:, -1] = 0.0           # full-local never touches the edge
         t_edge = jnp.asarray(te, jnp.float32)
+
+    pool_low = pool_high = None
+    if pool_ranges is not None:
+        lo, hi = pool_ranges
+        shape = (pool.n_servers, 3)
+        if np.asarray(lo).shape != shape or np.asarray(hi).shape != shape:
+            raise ValueError(f"pool_ranges must be (low, high) {shape} "
+                             f"arrays, got {np.asarray(lo).shape}")
+        pool_low = jnp.asarray(lo, jnp.float32)
+        pool_high = jnp.asarray(hi, jnp.float32)
 
     return EnvParams(
         l_new=l_new, n_new=n_new, feasible=feasible, p_compute=p_vec,
@@ -180,7 +228,11 @@ def make_env_params(plan: Union[SplitPlan, FleetPlan], *, n_ue=5,
         n_ue=n_ue, pathloss=jnp.float32(pathloss),
         churn_rate=jnp.float32(churn_rate),
         leave_rate=jnp.float32(leave_rate),
-        server_dist=server_dist, t_edge=t_edge)
+        server_dist=server_dist, t_edge=t_edge,
+        pool_geom=jnp.asarray(pool_geometry(pool)),
+        omega_cell=jnp.full((n_channels,), omega, jnp.float32),
+        edge_work=jnp.asarray(work, jnp.float32),
+        pool_low=pool_low, pool_high=pool_high)
 
 
 class EnvState(NamedTuple):
@@ -191,6 +243,11 @@ class EnvState(NamedTuple):
     t: jnp.ndarray          # frame counter
     key: jnp.ndarray
     active: jnp.ndarray = None  # (N,) bool membership mask (all True static)
+    # (E, 3) resampled pool geometry, or None on the static-pool path.
+    # Geometry is DATA like the churn mask: shapes stay fixed, and whether
+    # a state carries it is a trace-time (pytree-structure) property, so
+    # the default envs compile exactly the pre-PR5 graph.
+    geom: jnp.ndarray = None
 
 
 class MECEnv:
@@ -230,6 +287,16 @@ class MECEnv:
             params.feasible, params.t0))
         self._min_dist_scale = 1.0 if params.server_dist is None \
             else float(np.asarray(params.server_dist).min())
+        # entity-set observation support: server geometry (static default),
+        # per-UE mean feasible edge-tail work, and resampling ranges
+        self.randomizable = params.pool_low is not None
+        self.entity_dims = {"ue": OBS_ENT_UE, "server": OBS_ENT_SRV,
+                            "edge": OBS_ENT_EDGE}
+        work = np.asarray(params.edge_work, np.float64)
+        offl_feas = np.asarray(params.feasible, bool)[:, :-1]
+        cnt = np.maximum(offl_feas.sum(axis=1), 1)
+        self._ue_work_mean = jnp.asarray(
+            (work[:, :-1] * offl_feas).sum(axis=1) / cnt, jnp.float32)
         discrete = [DiscreteHead("split", self.n_actions_b),
                     DiscreteHead("channel", self.n_channels)]
         if self.multi_server:
@@ -239,8 +306,19 @@ class MECEnv:
             continuous=(ContinuousHead("power", 1e-4, float(params.p_max)),),
             masks={"split": params.feasible})
 
-    def reset(self, key, *, eval_mode=False) -> EnvState:
+    def reset(self, key, *, eval_mode=False, randomize=False) -> EnvState:
+        """``randomize=True`` (needs ``pool_ranges`` at construction) draws
+        this episode's pool geometry uniformly from the ranges and stores
+        it on the state; physics and entity observations then follow the
+        drawn geometry, and every auto-reset redraws it. The default reset
+        consumes exactly the pre-PR5 key stream."""
         p = self.params
+        geom = None
+        if randomize:
+            if not self.randomizable:
+                raise ValueError("randomize=True needs pool_ranges")
+            key, kg = jax.random.split(key)
+            geom = self._draw_geom(kg)
         kk, kd, kn = jax.random.split(key, 3)
         if eval_mode:
             k = jnp.full((p.n_ue,), p.lam_tasks, jnp.float32)
@@ -251,7 +329,31 @@ class MECEnv:
                                    maxval=p.d_high)
         return EnvState(k=k, l=jnp.zeros((p.n_ue,)), n=jnp.zeros((p.n_ue,)),
                         d=d, t=jnp.zeros((), jnp.int32), key=kn,
-                        active=jnp.ones((p.n_ue,), bool))
+                        active=jnp.ones((p.n_ue,), bool), geom=geom)
+
+    def _draw_geom(self, key):
+        p = self.params
+        return jax.random.uniform(key, p.pool_low.shape, minval=p.pool_low,
+                                  maxval=p.pool_high)
+
+    def _geom(self, s: EnvState):
+        """This state's (E, 3) pool geometry: resampled (on the state) or
+        the construction-time default."""
+        return self.params.pool_geom if s.geom is None else s.geom
+
+    def _pool_phys(self, s: EnvState):
+        """None on the static-geometry path (physics read the precomputed
+        params arrays — bit-for-bit the pre-PR5 graph); with resampled
+        geometry, the (server_dist, omega, t_edge) triple recomputed from
+        the state's draw."""
+        if not self.multi_server or s.geom is None:
+            return None
+        p = self.params
+        dist = s.geom[:, 0]
+        omega = s.geom[:, 1][:, None] * p.omega_cell[None, :]
+        # service time is LINEAR in the drawn slowness (0 = instant edge)
+        t_edge = p.edge_work[:, :, None] * s.geom[None, None, :, 2]
+        return dist, omega, t_edge
 
     def observe(self, s: EnvState):
         p = self.params
@@ -309,6 +411,70 @@ class MECEnv:
             jnp.broadcast_to(fleet, (n, OBS_UE_FLEET)),
         ], axis=1)
 
+    def observe_entities(self, s: EnvState):
+        """Structured ENTITY-SET observation for the per-server route
+        scorer: a pytree ``{"ue": (N, d_u), "server": (E, d_s),
+        "edge": (N, E, d_e)}`` whose row dimensions are constants
+        (independent of N, E, and B_max). Unlike `observe_per_ue`, the
+        edge pool is not flattened into mean-field aggregates — servers
+        are first-class entities the policy scores individually, which is
+        what lets it transfer across pool layouts AND pool sizes.
+
+          ue (OBS_ENT_UE): own queue/task/channel state (zeroed standby,
+              nearest-server distance from the LIVE geometry), activity
+              flag, static device/table descriptors, mean-field fleet
+              aggregates — the `observe_per_ue` row minus the pool block
+          server (OBS_ENT_SRV): geometry [dist_scale, bw_scale,
+              slowness / EDGE_SLOW_NORM] + active UEs per (server,
+              channel) slot
+          edge (OBS_ENT_EDGE): UE->server distance, clean-channel rate
+              proxy at p_max, and mean feasible edge-service seconds of
+              THIS ue on THIS server
+
+        Rows are permutation-equivariant over UEs AND servers (aggregates
+        are symmetric; edge features permute on both axes), and all three
+        blocks follow a state's resampled geometry when present."""
+        p = self.params
+        n = p.n_ue
+        geom = self._geom(s)                                   # (E, 3)
+        n_srv = geom.shape[0]
+        act = s.active.astype(jnp.float32)
+        own = jnp.stack([
+            s.k / jnp.maximum(p.lam_tasks, 1.0),
+            s.l / p.t0,
+            s.n / BITS_NORM,
+            s.d / DIST_NORM,
+            s.d * geom[:, 0].min() / DIST_NORM,
+        ], axis=1) * act[:, None]
+        n_act = jnp.maximum(act.sum(), 1.0)
+        per_slot = act.sum() / (n_srv * self.n_channels)
+        fleet = jnp.stack([
+            act.sum() / n,
+            (s.k * act).sum() / (n_act * jnp.maximum(p.lam_tasks, 1.0)),
+            (s.d * act).sum() / (n_act * DIST_NORM),
+            per_slot,
+        ])
+        ue = jnp.concatenate([
+            own,
+            act[:, None],
+            self._ue_static,
+            jnp.broadcast_to(fleet, (n, OBS_UE_FLEET)),
+        ], axis=1)
+
+        srv = jnp.concatenate([
+            geom * jnp.asarray([1.0, 1.0, 1.0 / EDGE_SLOW_NORM]),
+            jnp.broadcast_to(per_slot, (n_srv,))[:, None],
+        ], axis=1)
+
+        dist_ne = s.d[:, None] * geom[None, :, 0]              # (N, E)
+        g_ne = channel_gain(dist_ne, p.pathloss)
+        om_mean = geom[:, 1] * p.omega_cell.mean()             # (E,)
+        rate = om_mean[None, :] \
+            * jnp.log2(1.0 + p.p_max * g_ne / p.sigma.mean()) / RATE_NORM
+        te = self._ue_work_mean[:, None] * geom[None, :, 2] / p.t0
+        edge = jnp.stack([dist_ne / DIST_NORM, rate, te], axis=-1)
+        return {"ue": ue, "server": srv, "edge": edge}
+
     def action_masks(self, s: EnvState = None):
         """Per-head feasibility masks ({head: (N, n) bool}; heads without
         an entry are unrestricted). The split head carries the per-UE
@@ -323,13 +489,17 @@ class MECEnv:
         return {"split": jnp.where(s.active[:, None], feas, local_only)}
 
     # ------------------------------------------------------------ physics
-    def _rates(self, d, c, p_tx, route, transmitting):
+    def _rates(self, d, c, p_tx, route, transmitting, phys=None):
         """Per-UE uplink rates at distances d under the joint action (the
-        pool's per-server path loss and channels when routed)."""
+        pool's per-server path loss and channels when routed). ``phys``:
+        an optional `_pool_phys` triple overriding the static pool
+        geometry with a state's resampled draw."""
         prm = self.params
         if self.multi_server:
-            g = channel_gain(d * prm.server_dist[route], prm.pathloss)
-            r = uplink_rates(p_tx, c, g, transmitting, omega=prm.omega,
+            dist, omega = (prm.server_dist, prm.omega) if phys is None \
+                else phys[:2]
+            g = channel_gain(d * dist[route], prm.pathloss)
+            r = uplink_rates(p_tx, c, g, transmitting, omega=omega,
                              sigma=prm.sigma, route=route)
         else:
             g = channel_gain(d, prm.pathloss)
@@ -337,12 +507,13 @@ class MECEnv:
                              sigma=prm.sigma)
         return jnp.maximum(r, 1.0)  # avoid div-by-zero; 1 b/s floor
 
-    def _edge_seconds(self, b, route, offloads):
+    def _edge_seconds(self, b, route, offloads, phys=None):
         """Per-task edge service time under processor sharing: each
         offloaded task at split b on server e takes t_edge[n, b, e] times
         the number of UEs concurrently offloading to e."""
         prm = self.params
-        te = prm.t_edge[jnp.arange(prm.n_ue), b, route]
+        t_edge = prm.t_edge if phys is None else phys[2]
+        te = t_edge[jnp.arange(prm.n_ue), b, route]
         load = jax.nn.one_hot(route, self.n_servers,
                               dtype=te.dtype).T @ offloads.astype(te.dtype)
         return te * jnp.maximum(load[route], 1.0), load
@@ -356,6 +527,7 @@ class MECEnv:
         a = self.action_space.clip(actions)
         b, c, p_tx = a["split"], a["channel"], a["power"]
         route = a["route"] if self.multi_server else None
+        phys = self._pool_phys(s)
         act = s.active
         # inactive UEs do no work: no compute, no tx, no interference. With
         # act all-True (static env) the & is an exact identity, so the
@@ -365,7 +537,7 @@ class MECEnv:
         n_new = per_ue(prm.n_new, b)
         # a UE contributes interference if it offloads anything this frame
         offloads = ((s.n > 0) | (n_new > 0)) & has_work
-        r = self._rates(s.d, c, p_tx, route, offloads)
+        r = self._rates(s.d, c, p_tx, route, offloads, phys)
 
         t_rem = jnp.full_like(s.l, prm.t0)
         energy = jnp.zeros_like(s.l)
@@ -390,7 +562,8 @@ class MECEnv:
         t_task = l_new + n_new / r
         server_load = None
         if self.multi_server:
-            te_eff, server_load = self._edge_seconds(b, route, offloads)
+            te_eff, server_load = self._edge_seconds(b, route, offloads,
+                                                     phys)
             t_task = t_task + te_eff
         can = (k1 > 0) & (t_task > 0) & act
         m = jnp.where(can, jnp.floor(t_rem / jnp.maximum(t_task, 1e-9)), 0.0)
@@ -451,6 +624,14 @@ class MECEnv:
 
         done = jnp.all(k3 <= 0)
 
+        # geometry-carrying states redraw their pool layout on episode end
+        # ("resample per env at reset"); the extra key split exists only in
+        # this traced variant, so static-geometry streams are untouched
+        geom_next = s.geom
+        if s.geom is not None:
+            key_next, key_geom = jax.random.split(key_next)
+            geom_next = jnp.where(done, self._draw_geom(key_geom), s.geom)
+
         # auto-reset on termination (full fleet active again)
         fresh = self.reset(key_reset)
         nxt = EnvState(
@@ -460,7 +641,8 @@ class MECEnv:
             d=jnp.where(done, fresh.d, d_next),
             t=jnp.where(done, 0, s.t + 1),
             key=key_next,
-            active=jnp.where(done, fresh.active, act_next))
+            active=jnp.where(done, fresh.active, act_next),
+            geom=geom_next)
         info = {"completed": k_t, "energy": e_t,
                 "rate_mean": r.mean(), "offloads": offloads.sum(),
                 "n_active": act.sum(), "spawned": spawned,
@@ -478,13 +660,14 @@ class MECEnv:
         a = self.action_space.clip(actions)
         b, c, p_tx = a["split"], a["channel"], a["power"]
         route = a["route"] if self.multi_server else None
+        phys = self._pool_phys(s)
         l_b = per_ue(prm.l_new, b)
         n_b = per_ue(prm.n_new, b)
         offl = (n_b > 0) & s.active
-        r = self._rates(s.d, c, p_tx, route, offl)
+        r = self._rates(s.d, c, p_tx, route, offl, phys)
         t = l_b + n_b / r
         if self.multi_server:
-            te_eff, _ = self._edge_seconds(b, route, offl)
+            te_eff, _ = self._edge_seconds(b, route, offl, phys)
             t = t + te_eff
         e = l_b * prm.p_compute + (n_b / r) * p_tx
         return t, e

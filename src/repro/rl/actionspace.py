@@ -25,6 +25,12 @@ HOW TO ADD A HEAD
    ``(128, 64, 2)`` (mu, log_std) branch for continuous heads), and
    sampling / log-probs / entropy / PPO losses sum over whatever heads
    exist. This is exactly how the multi-server ``route`` head landed.
+4. Alternatively a network can PROVIDE a discrete head's logits itself —
+   ``init_heads(..., skip=(name,))`` builds no branch and
+   ``forward(..., provided={name: logits})`` injects them (still masked
+   identically). That makes the head's width data-dependent: the entity
+   policy's route scorer emits one logit per server, so the same
+   parameters serve pools of any size E.
 
 All functions are jit/vmap-clean and operate on a SINGLE actor (1-D
 logits); callers vmap over actors and environments, mirroring the rest of
@@ -158,26 +164,38 @@ class HybridActionSpace:
         return out
 
     # ------------------------------------------------------------ network
-    def init_heads(self, key, feat_dim, mlp_init):
+    def init_heads(self, key, feat_dim, mlp_init, skip=()):
         """One output branch per head: (feat_dim, 64, n) logits for a
         discrete head, (feat_dim, 64, 2) (mu, raw_log_std) for a
         continuous one. `key` is either a single PRNG key (split
         internally) or a stacked (n_heads, 2) key array — callers that
-        must preserve an existing key stream pass the stack."""
-        keys = key if key.ndim == 2 else jax.random.split(key,
-                                                          len(self.heads))
+        must preserve an existing key stream pass the stack.
+
+        ``skip``: head names whose logits the network PROVIDES itself
+        (see `forward`'s ``provided``) — no fixed-width branch is built
+        for them, which is how a head's width can be data-dependent (the
+        entity policy's route scorer emits one logit per server, so E is
+        free at inference time)."""
+        heads = [h for h in self.heads if h.name not in skip]
+        keys = key if key.ndim == 2 else jax.random.split(key, len(heads))
         out = {}
-        for h, k in zip(self.heads, keys):
+        for h, k in zip(heads, keys):
             width = h.n if isinstance(h, DiscreteHead) else 2
             out[h.name] = mlp_init(k, (feat_dim, 64, width))
         return out
 
-    def forward(self, head_params, h, mlp_apply, masks=None):
+    def forward(self, head_params, h, mlp_apply, masks=None, provided=None):
         """Trunk features -> distribution dict: masked logits per discrete
-        head, {"mu", "log_std"} per continuous head."""
+        head, {"mu", "log_std"} per continuous head. ``provided``: {name:
+        logits} for heads whose logits the caller computed itself (heads
+        skipped at `init_heads`); they still go through the same masking,
+        so everything downstream (sample/log_prob/entropy/mode) treats
+        provider heads and branch heads identically."""
         dist = {}
         for hd in self.discrete:
-            logits = mlp_apply(head_params[hd.name], h)
+            logits = provided[hd.name] if provided \
+                and hd.name in provided \
+                else mlp_apply(head_params[hd.name], h)
             dist[hd.name] = _mask_logits(logits, self.actor_mask(masks,
                                                                  hd.name))
         for hd in self.continuous:

@@ -8,8 +8,8 @@ is named here, so the single-server (split, channel, power) env and the
 multi-server (split, channel, route, power) env train through the same
 code path.
 
-Two actor modes, selected by ``MAHPPOConfig.shared_policy`` (init /
-sampling / loss / update are generic over both):
+Three actor modes, selected by ``MAHPPOConfig.shared_policy`` /
+``entity_policy`` (init / sampling / loss / update are generic over all):
 
 * per-UE actors (default): N distinct parameter sets over the flat global
   observation — the paper's setup, bit-for-bit unchanged.
@@ -21,6 +21,16 @@ sampling / loss / update are generic over both):
   (benchmarks/bench_generalization.py). The critic pools the feature rows
   (mean over the fleet — permutation-invariant), so the whole agent is
   fleet-size-agnostic.
+* entity policy: the structured entity-set observation
+  (``env.observe_entities``) through a shared per-server route scorer
+  (``nets.entity_actor_forward``) — route logits are computed per (UE,
+  server) pair, so the SAME parameters run on pools of any size E
+  (train on 2 servers, evaluate zero-shot on 3-4). Pair it with
+  ``randomize_pool=True`` (an env built with ``pool_ranges``) so each
+  episode draws a fresh pool geometry and the route head actually
+  receives pool-feature gradients — single-pool training leaves pool
+  features constant, which is why the mean-field shared policy cannot
+  transfer across layouts.
 
 Paper defaults: ||M||=1024, B=256, K reuse, gamma=0.95, lambda=0.95,
 eps=0.2, zeta=0.001, lr=1e-4.
@@ -54,14 +64,38 @@ class MAHPPOConfig:
     iterations: int = 50
     norm_adv: bool = True
     shared_policy: bool = False  # one weight-shared actor over per-UE rows
+    entity_policy: bool = False  # entity-set obs + per-server route scorer
+    randomize_pool: bool = False  # resample EdgePool geometry per episode
+
+    def __post_init__(self):
+        if self.shared_policy and self.entity_policy:
+            raise ValueError("pick one of shared_policy / entity_policy")
+        if self.randomize_pool and not self.entity_policy:
+            # flat observations (observe / observe_per_ue) describe the
+            # CONSTRUCTION-time pool only; training them on resampled
+            # geometry would silently learn from state that contradicts
+            # the physics. Only observe_entities follows EnvState.geom.
+            raise ValueError("randomize_pool trains on resampled pool "
+                             "geometry that only the entity observation "
+                             "exposes — set entity_policy=True")
 
 
-def init_agent(key, env: MECEnv, *, shared_policy=False):
-    """Per-UE actors ({"actors": stacked params}) or, with
-    ``shared_policy``, ONE actor over `env.observe_per_ue` feature rows
-    ({"actor": params}) with a mean-pooled critic. The default path's key
-    stream is untouched — bit-for-bit the pre-shared-policy init."""
+def init_agent(key, env: MECEnv, *, shared_policy=False,
+               entity_policy=False):
+    """Per-UE actors ({"actors": stacked params}); with ``shared_policy``,
+    ONE actor over `env.observe_per_ue` feature rows ({"actor": params})
+    with a mean-pooled critic; with ``entity_policy``, the entity-set
+    actor + set critic ({"entity_actor": params}) over
+    `env.observe_entities` pytrees. The default path's key stream is
+    untouched — bit-for-bit the pre-shared-policy init."""
+    if shared_policy and entity_policy:
+        raise ValueError("pick one of shared_policy / entity_policy")
     ka, kc = jax.random.split(key)
+    if entity_policy:
+        actor = nets.init_entity_actor(ka, env.entity_dims,
+                                       env.action_space)
+        critic = nets.init_entity_critic(kc)
+        return {"entity_actor": actor, "critic": critic}
     if shared_policy:
         actor = nets.init_actor(ka, env.ue_feat_dim, env.action_space)
         critic = nets.init_critic(kc, env.ue_feat_dim)
@@ -93,49 +127,80 @@ def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
     masks0 = env.action_masks()                     # {head: (N, n)} per-UE
     n_ue = env.params.n_ue
     shared = cfg.shared_policy
-    # the shared actor is vmapped over actor rows with in_axes=(0, 0), so
-    # its mask pytree must be complete (every discrete head, (N, n) leaves)
-    masks0_full = space.broadcast_masks(masks0, n_ue) if shared else None
+    entity = cfg.entity_policy
+    # shared/entity actors are vmapped over actor rows with in_axes=(0, 0),
+    # so their mask pytree must be complete (every discrete head, (N, n))
+    masks0_full = space.broadcast_masks(masks0, n_ue) \
+        if (shared or entity) else None
 
     def _dist(agent, obs, masks):
         """Per-head distribution stacks (N, ...) for ONE env's observation
-        — (obs_dim,) through N per-UE actors, or (N, F) feature rows
-        through the weight-shared actor."""
+        — (obs_dim,) through N per-UE actors, (N, F) feature rows through
+        the weight-shared actor, or the entity-set pytree through the
+        per-server route scorer."""
+        if entity:
+            return nets.entity_actor_forward(agent["entity_actor"], space,
+                                             obs, masks)
         if shared:
             return nets.shared_actor_forward(agent["actor"], space, obs,
                                              masks)
         return _policy_all(agent["actors"], space, obs, masks)
 
     def _value(agent, obs):
-        """Critic input: the flat global observation, or (shared mode) the
-        mean-pooled feature rows — permutation-invariant and O(1) in N."""
+        """Critic input: the flat global observation, (shared mode) the
+        mean-pooled feature rows, or (entity mode) the mean-pooled shared-
+        trunk embeddings — permutation-invariant and O(1) in N either
+        way."""
+        if entity:
+            return nets.entity_value_forward(agent["entity_actor"],
+                                             agent["critic"], obs)
         return nets.critic_forward(agent["critic"],
                                    obs.mean(axis=0) if shared else obs)
 
+    def _policy_value(agent, obs, masks):
+        """Entity-mode (dist, value) in ONE trunk pass — the value head
+        reads the same embeddings the scorer routes with, and the jitted
+        step pays for one encoder evaluation, not two."""
+        return nets.entity_policy_value(agent["entity_actor"],
+                                        agent["critic"], space, obs, masks)
+
     def _observe(states):
-        fn = env.observe_per_ue if shared else env.observe
+        fn = env.observe_entities if entity \
+            else env.observe_per_ue if shared else env.observe
         return jax.vmap(fn)(states)
 
     def sample_step(agent, key, states):
         """states: batched EnvState over E envs."""
-        obs = _observe(states)                  # (E, D) / shared: (E, N, F)
+        obs = _observe(states)      # (E, D) / rows (E, N, F) / entity tree
+        n_envs_b = states.k.shape[0]
         active = states.active.astype(jnp.float32)                # (E, N)
+        value = None
         if env.dynamic:
             # state-dependent masks: inactive actors pinned to full-local
             masks = jax.vmap(env.action_masks)(states)            # (E,N,n)
-            if shared:
+            if shared or entity:
                 masks = jax.vmap(
                     lambda m: space.broadcast_masks(m, n_ue))(masks)
-            dist = jax.vmap(lambda o, m: _dist(agent, o, m))(obs, masks)
+            if entity:
+                dist, value = jax.vmap(
+                    lambda o, m: _policy_value(agent, o, m))(obs, masks)
+            else:
+                dist = jax.vmap(lambda o, m: _dist(agent, o, m))(obs,
+                                                                 masks)
         else:
-            masks = masks0_full if shared else masks0
-            dist = jax.vmap(lambda o: _dist(agent, o, masks))(obs)
-        keys = jax.random.split(key, obs.shape[0] * n_ue).reshape(
-            obs.shape[0], n_ue, 2)
+            masks = masks0_full if (shared or entity) else masks0
+            if entity:
+                dist, value = jax.vmap(
+                    lambda o: _policy_value(agent, o, masks))(obs)
+            else:
+                dist = jax.vmap(lambda o: _dist(agent, o, masks))(obs)
+        keys = jax.random.split(key, n_envs_b * n_ue).reshape(
+            n_envs_b, n_ue, 2)
         actions = _sample_all(space, keys, dist, masks,
                               mask_axis=0 if env.dynamic else None)
         logp = jax.vmap(jax.vmap(space.log_prob))(dist, actions, active)
-        value = jax.vmap(lambda o: _value(agent, o))(obs)
+        if value is None:
+            value = jax.vmap(lambda o: _value(agent, o))(obs)
         phys = space.execute(actions)
         nstates, reward, done, info = jax.vmap(env.step)(states, phys)
         tr = {"obs": obs, "actions": actions, "logp": logp,
@@ -162,8 +227,12 @@ def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
         obs, actions = batch["obs"], batch["actions"]
         adv, ret, logp_old = batch["adv"], batch["ret"], batch["logp"]
         act = batch["active"]                                     # (B, N)
-        dist = jax.vmap(lambda o: _dist(
-            agent, o, masks0_full if shared else masks0))(obs)
+        if entity:
+            dist, v = jax.vmap(
+                lambda o: _policy_value(agent, o, masks0_full))(obs)
+        else:
+            dist = jax.vmap(lambda o: _dist(
+                agent, o, masks0_full if shared else masks0))(obs)
         logp = jax.vmap(jax.vmap(space.log_prob))(dist, actions, act)
         ratio = jnp.exp(logp - logp_old)                          # (B, N)
         a = adv[:, None]
@@ -176,7 +245,8 @@ def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
         n_act = jnp.maximum(act.sum(axis=0), 1.0)                 # (N,)
         actor_loss = -(((surr * act).sum(axis=0) / n_act).sum()
                        + cfg.ent_coef * ((ent * act).sum(axis=0) / n_act).sum())
-        v = jax.vmap(lambda o: _value(agent, o))(obs)
+        if not entity:
+            v = jax.vmap(lambda o: _value(agent, o))(obs)
         critic_loss = jnp.mean((v - ret) ** 2)
         total = actor_loss + critic_loss
         return total, {"actor_loss": actor_loss, "value_loss": critic_loss,
@@ -188,9 +258,11 @@ def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
         T, E = adv.shape
         M = T * E
         flat = {
-            # shared mode keeps the per-UE row structure: (M, N, F)
-            "obs": traj["obs"].reshape(M, n_ue, -1) if shared
-            else traj["obs"].reshape(M, -1),
+            # flatten (T, E) -> M on every obs leaf: the flat (M, D)
+            # observation, the shared mode's (M, N, F) rows, and the
+            # entity mode's {"ue"/"server"/"edge"} pytree alike
+            "obs": jax.tree_util.tree_map(
+                lambda x: x.reshape((M,) + x.shape[2:]), traj["obs"]),
             "actions": jax.tree_util.tree_map(
                 lambda x: x.reshape(M, n_ue), traj["actions"]),
             "logp": traj["logp"].reshape(M, n_ue),
@@ -233,13 +305,25 @@ def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
     return iteration
 
 
+def init_states(env: MECEnv, cfg: MAHPPOConfig, key):
+    """Batched initial states for training: with ``cfg.randomize_pool``
+    every parallel env draws its own pool geometry (and redraws it on
+    each auto-reset), so one training run sees n_envs layouts at a time
+    instead of one forever."""
+    keys = jax.random.split(key, cfg.n_envs)
+    if cfg.randomize_pool:
+        return jax.vmap(lambda k: env.reset(k, randomize=True))(keys)
+    return jax.vmap(env.reset)(keys)
+
+
 def train_mahppo(env: MECEnv, cfg: MAHPPOConfig, seed=0,
                  log_cb: Callable = None):
     key = jax.random.PRNGKey(seed)
     key, ki, kr = jax.random.split(key, 3)
-    agent = init_agent(ki, env, shared_policy=cfg.shared_policy)
+    agent = init_agent(ki, env, shared_policy=cfg.shared_policy,
+                       entity_policy=cfg.entity_policy)
     opt = adamw_init(agent)
-    states = jax.vmap(env.reset)(jax.random.split(kr, cfg.n_envs))
+    states = init_states(env, cfg, kr)
     iteration = make_train_fns(env, cfg)
     history = []
     for it in range(cfg.iterations):
@@ -265,10 +349,14 @@ def evaluate_policy(env: MECEnv, agent, *, frames=64, seed=0,
     from shared_policy training) is applied to `env.observe_per_ue` rows —
     including envs of a DIFFERENT fleet size or pool layout than it was
     trained on (zero-shot transfer), since the feature dimension is
-    N/E-independent."""
+    N/E-independent. An entity agent ({"entity_actor": ...}) runs on
+    `env.observe_entities` pytrees — transferring across pool SIZE too,
+    since its route logits are scored per server rather than emitted by a
+    fixed-width branch."""
     space = env.action_space
     n_ue = env.params.n_ue
     shared = "actor" in agent
+    entity = "entity_actor" in agent
 
     @jax.jit
     def rollout(key):
@@ -277,7 +365,12 @@ def evaluate_policy(env: MECEnv, agent, *, frames=64, seed=0,
         def body(carry, sub):
             s = carry
             masks = env.action_masks(s)      # state-dependent when dynamic
-            if shared:
+            if entity:
+                masks = space.broadcast_masks(masks, n_ue)
+                dist = nets.entity_actor_forward(
+                    agent["entity_actor"], space, env.observe_entities(s),
+                    masks)
+            elif shared:
                 masks = space.broadcast_masks(masks, n_ue)
                 dist = nets.shared_actor_forward(
                     agent["actor"], space, env.observe_per_ue(s), masks)

@@ -71,6 +71,114 @@ def shared_actor_forward(p, space: HybridActionSpace, feats, masks):
                     in_axes=(0, 0))(feats, masks)
 
 
+# --------------------------------------------------- entity-set networks
+# The pool-generalist policy (PR 5): instead of flattening the edge pool
+# into mean-field aggregates, the actor consumes the env's entity-set
+# observation {"ue": (N, d_u), "server": (E, d_s), "edge": (N, E, d_e)}
+# and scores every (UE, server) pair with ONE shared MLP — route logits
+# are (N, E) with E free at inference time (train on 2 servers, evaluate
+# zero-shot on 3-4), and the policy is permutation-equivariant over both
+# UEs and servers. The scorer's softmax doubles as attention weights that
+# pool the server embeddings into a per-UE pool context feeding the other
+# heads; the critic mean-pools encoded entity sets (both poolings are
+# permutation-invariant over UEs and servers).
+
+SRV_EMBED = 32               # server embedding width (route scorer input)
+
+
+def init_entity_actor(key, dims, space: HybridActionSpace):
+    """dims: the env's ``entity_dims`` {"ue", "server", "edge"} feature
+    widths. The route head gets NO fixed-width branch (``skip``) — its
+    logits come from the shared per-server scorer — so the parameter set
+    is independent of the pool size E as well as the fleet size N. The
+    server encoder is a single tanh layer: server rows are 4 raw geometry
+    features, and keeping the encoder shallow keeps the entity iteration
+    within the parity budget of the flat shared policy."""
+    n_branch = len([h for h in space.heads if h.name != "route"])
+    ks = jax.random.split(key, 3 + n_branch)
+    return {
+        "ue_enc": _mlp_init(ks[0], (dims["ue"], 192, 128),
+                            out_scale=np.sqrt(2.0)),
+        "srv_enc": _linear_init(ks[1], dims["server"], SRV_EMBED),
+        "scorer": _mlp_init(ks[2], (128 + SRV_EMBED + dims["edge"], 48, 1),
+                            out_scale=0.01),
+        "heads": space.init_heads(ks[3:], 128 + SRV_EMBED, _mlp_init,
+                                  skip=("route",)),
+    }
+
+
+def entity_trunk(p, obs):
+    """The shared entity encoder: (ue_embed (N, 128), srv_embed (E, S),
+    route_logits (N, E), ctx (N, S)). Policy heads AND the value head
+    read these — one encoding per step (XLA CSE merges the actor and
+    critic passes inside a jitted step), and the value gradient shapes
+    the same representations the scorer routes with."""
+    ue = jnp.tanh(_mlp(p["ue_enc"], obs["ue"]))                # (N, 128)
+    srv = jnp.tanh(obs["server"] @ p["srv_enc"]["w"]
+                   + p["srv_enc"]["b"])                        # (E, S)
+    n, e = obs["edge"].shape[:2]
+    pair = jnp.concatenate([
+        jnp.broadcast_to(ue[:, None, :], (n, e, ue.shape[-1])),
+        jnp.broadcast_to(srv[None, :, :], (n, e, srv.shape[-1])),
+        obs["edge"],
+    ], axis=-1)
+    route_logits = _mlp(p["scorer"], pair)[..., 0]             # (N, E)
+    ctx = jax.nn.softmax(route_logits, axis=-1) @ srv          # (N, S)
+    return ue, srv, route_logits, ctx
+
+
+def entity_actor_forward(p, space: HybridActionSpace, obs, masks):
+    """obs: one env's entity-set pytree; masks: complete per-actor dict
+    with (N, n) leaves (``space.broadcast_masks``). Returns per-head
+    distribution stacks with a leading actor axis — the same pytree shape
+    as `shared_actor_forward`, so sampling/log-prob/entropy/mode are
+    mode-agnostic downstream.
+
+    Route logits: scorer([ue_embed ‖ server_embed ‖ edge_feats]) applied
+    to every (UE, server) pair -> (N, E), permutation-equivariant over
+    servers. The scorer softmax attention-pools the server embeddings
+    into each UE's pool context for the remaining heads."""
+    ue, _, route_logits, ctx = entity_trunk(p, obs)
+    h = jnp.concatenate([ue, ctx], axis=-1)
+    return jax.vmap(
+        lambda hh, rl, m: space.forward(p["heads"], hh, _mlp, m,
+                                        provided={"route": rl}),
+        in_axes=(0, 0, 0))(h, route_logits, masks)
+
+
+def init_entity_critic(key):
+    """The entity value HEAD: a small MLP over the mean-pooled trunk
+    embeddings (`entity_value_forward`). The encoders live on the actor
+    and are shared — pooling happens after the nonlinearity (pooling raw
+    feature rows instead demonstrably cripples the value signal under
+    geometry randomization), and the whole agent stays O(1) in N and E."""
+    return _mlp_init(key, (128 + SRV_EMBED, 64, 1), out_scale=1.0)
+
+
+def entity_value_forward(actor_p, head_p, obs):
+    """Permutation-invariant state value from the shared trunk: mean-pool
+    the UE and server embeddings and regress."""
+    ue, srv, _, _ = entity_trunk(actor_p, obs)
+    h = jnp.concatenate([ue.mean(axis=0), srv.mean(axis=0)], axis=-1)
+    return _mlp(head_p, h)[..., 0]
+
+
+def entity_policy_value(actor_p, head_p, space, obs, masks):
+    """(dist, value) from ONE trunk pass — the training hot path. The
+    separate `entity_actor_forward` / `entity_value_forward` entry points
+    trace the identical math for callers that only need one of the two
+    (evaluation, bootstrap values); this fused form keeps the jitted
+    sample/loss steps at one encoder evaluation per state."""
+    ue, srv, route_logits, ctx = entity_trunk(actor_p, obs)
+    h = jnp.concatenate([ue, ctx], axis=-1)
+    dist = jax.vmap(
+        lambda hh, rl, m: space.forward(actor_p["heads"], hh, _mlp, m,
+                                        provided={"route": rl}),
+        in_axes=(0, 0, 0))(h, route_logits, masks)
+    hv = jnp.concatenate([ue.mean(axis=0), srv.mean(axis=0)], axis=-1)
+    return dist, _mlp(head_p, hv)[..., 0]
+
+
 def param_count(tree) -> int:
     """Total parameter count of an agent/actor pytree. The shared-policy
     actor is O(1) in the fleet size; per-UE actors are O(N) — the

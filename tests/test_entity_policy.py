@@ -1,0 +1,240 @@
+"""Entity-set policy (PR 5): the shared per-server route scorer and the
+geometry-resampling machinery behind it.
+
+Layers of guarantees:
+
+1. the entity agent trains end-to-end (one jitted iteration) on static,
+   churn, pool, and RANDOMIZED-pool envs, and its parameter set carries
+   no fixed-width route branch — the same parameters run on pools of any
+   size E (train at E=2, evaluate zero-shot at E=1/3).
+2. geometry resampling: `reset(randomize=True)` draws within the declared
+   ranges, the default reset carries NO geometry (bitwise-identical
+   pytree structure to PR 4), episode-end auto-resets redraw, and the
+   drawn geometry actually changes the physics (rates, edge service).
+3. the route scorer's logits respond to the entity features (a server
+   made infinitely slow and far loses its routes), and the per-head
+   feasibility masks still bind under the provider path.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import overhead as oh
+from repro.core.cnn import make_resnet18
+from repro.core.fleets import (EdgePool, make_edge_pool,
+                               random_pool_ranges)
+from repro.core.split import build_fleet, cnn_split_table, \
+    transformer_split_table
+from repro.env.mecenv import MECEnv, make_env_params
+from repro.optim import adamw_init
+from repro.rl import nets
+from repro.rl.mahppo import (MAHPPOConfig, evaluate_policy, init_agent,
+                             init_states, make_train_fns)
+
+
+@pytest.fixture(scope="module")
+def mixed_fleet():
+    cnn = cnn_split_table(make_resnet18(101), 224)
+    cnn_iot = cnn_split_table(make_resnet18(101), 224, dev=oh.IOT_SOC)
+    tf_small = transformer_split_table(get_config("qwen3-1.7b"),
+                                       ue_dev=oh.PHONE_NPU, n_points=2)
+    return build_fleet([cnn, tf_small, cnn_iot],
+                       [oh.JETSON_NANO, oh.PHONE_NPU, oh.IOT_SOC])
+
+
+def _env_for(name, fleet):
+    if name == "pool":
+        return MECEnv(make_env_params(fleet, n_channels=2,
+                                      pool=make_edge_pool(2)))
+    if name == "churn":
+        return MECEnv(make_env_params(fleet, n_channels=2,
+                                      churn_rate=0.3, leave_rate=0.2))
+    if name == "randomized":
+        return MECEnv(make_env_params(fleet, n_channels=2,
+                                      pool=make_edge_pool(2),
+                                      pool_ranges=random_pool_ranges(2)))
+    return MECEnv(make_env_params(fleet, n_channels=2))
+
+
+@pytest.mark.parametrize("name", ["mixed", "pool", "churn", "randomized"])
+def test_entity_policy_trains_on_every_env_kind(mixed_fleet, name):
+    """One jitted entity-policy iteration end-to-end; the agent is a
+    single entity actor + value head and metrics are finite."""
+    env = _env_for(name, mixed_fleet)
+    cfg = MAHPPOConfig(iterations=1, horizon=64, n_envs=2, reuse=1,
+                       batch=32, entity_policy=True,
+                       randomize_pool=(name == "randomized"))
+    key = jax.random.PRNGKey(0)
+    agent = init_agent(key, env, entity_policy=True)
+    assert "entity_actor" in agent and "actors" not in agent
+    # no fixed-width route branch: route logits come from the scorer
+    assert "route" not in agent["entity_actor"]["heads"]
+    opt = adamw_init(agent)
+    states = init_states(env, cfg, key)
+    iteration = make_train_fns(env, cfg)
+    agent, opt, key, states, metrics = iteration(agent, opt, key, states)
+    assert np.isfinite(float(metrics["reward_mean"]))
+    res = evaluate_policy(env, agent, frames=8)
+    assert np.isfinite(res["t_task"]) and np.isfinite(res["reward"])
+
+
+def test_entity_agent_transfers_across_pool_size(mixed_fleet):
+    """The SAME parameter set evaluates on E=1, E=2, and E=3 pools (and a
+    bigger fleet): route logits are scored per server, so neither N nor E
+    appears in any parameter shape."""
+    env2 = _env_for("pool", mixed_fleet)
+    agent = init_agent(jax.random.PRNGKey(0), env2, entity_policy=True)
+    n_params = nets.param_count(agent)
+    for env in (
+            MECEnv(make_env_params(mixed_fleet, n_channels=2)),
+            MECEnv(make_env_params(mixed_fleet, n_channels=2,
+                                   pool=make_edge_pool(3)))):
+        res = evaluate_policy(env, agent, frames=4)
+        assert np.isfinite(res["t_task"]) and np.isfinite(res["e_task"])
+        # and an agent built FOR that env has the identical param count
+        a2 = init_agent(jax.random.PRNGKey(1), env, entity_policy=True)
+        assert nets.param_count(a2) == n_params
+
+
+def test_randomized_reset_draws_within_ranges(mixed_fleet):
+    env = _env_for("randomized", mixed_fleet)
+    lo = np.asarray(env.params.pool_low)
+    hi = np.asarray(env.params.pool_high)
+    geoms = []
+    for seed in range(8):
+        s = env.reset(jax.random.PRNGKey(seed), randomize=True)
+        g = np.asarray(s.geom)
+        assert g.shape == (2, 3)
+        assert np.all(g >= lo) and np.all(g <= hi)
+        geoms.append(g)
+    # the draws actually vary (the whole point of randomization)
+    assert np.std(np.stack(geoms), axis=0).min() > 0.0
+    # default reset carries NO geometry — the PR-4 state pytree exactly
+    s0 = env.reset(jax.random.PRNGKey(0))
+    assert s0.geom is None
+    # randomize on an env without ranges is an explicit error
+    with pytest.raises(ValueError, match="pool_ranges"):
+        _env_for("pool", mixed_fleet).reset(jax.random.PRNGKey(0),
+                                            randomize=True)
+
+
+def test_pool_ranges_require_multi_server(mixed_fleet):
+    with pytest.raises(ValueError, match="multi-server"):
+        make_env_params(mixed_fleet, n_channels=2,
+                        pool_ranges=random_pool_ranges(1))
+
+
+def test_randomize_pool_requires_entity_policy():
+    """Flat observations describe the construction-time pool only —
+    training them on resampled geometry would silently learn from state
+    that contradicts the physics, so the config combination is an
+    explicit error for both flat modes."""
+    with pytest.raises(ValueError, match="entity_policy"):
+        MAHPPOConfig(randomize_pool=True)
+    with pytest.raises(ValueError, match="entity_policy"):
+        MAHPPOConfig(randomize_pool=True, shared_policy=True)
+    with pytest.raises(ValueError, match="one of"):
+        MAHPPOConfig(shared_policy=True, entity_policy=True)
+    MAHPPOConfig(randomize_pool=True, entity_policy=True)   # the one way
+
+
+def test_geometry_changes_the_physics(mixed_fleet):
+    """The same actions under two planted geometries: a far/slow draw
+    must yield strictly worse per-task latency than a near/fast draw —
+    geometry is live data, not a dead observation field."""
+    env = _env_for("randomized", mixed_fleet)
+    n = env.params.n_ue
+    s = env.reset(jax.random.PRNGKey(0), eval_mode=True, randomize=True)
+    near = jnp.asarray([[1.0, 1.0, 0.0]] * 2, jnp.float32)
+    far = jnp.asarray([[2.0, 0.5, 4e-12]] * 2, jnp.float32)
+    acts = {"split": jnp.zeros((n,), jnp.int32),     # raw offload
+            "channel": jnp.asarray([0, 1, 0], jnp.int32),
+            "route": jnp.asarray([0, 1, 0], jnp.int32),
+            "power": jnp.full((n,), 0.3)}
+    t_near, _ = env.task_overhead(s._replace(geom=near), acts)
+    t_far, _ = env.task_overhead(s._replace(geom=far), acts)
+    assert np.all(np.asarray(t_far) > np.asarray(t_near))
+    # and the instant-edge near draw reproduces the no-service-time case
+    te_near = env._pool_phys(s._replace(geom=near))[2]
+    np.testing.assert_array_equal(np.asarray(te_near), 0.0)
+
+
+def test_auto_reset_redraws_geometry():
+    """Driving an episode to completion redraws the pool geometry (every
+    episode trains on a fresh layout); non-terminal steps keep it. A
+    homogeneous CNN fleet (sub-frame full-local tasks) drains its lam=1
+    queues in a handful of frames."""
+    env = MECEnv(make_env_params(
+        cnn_split_table(make_resnet18(101), 224), n_ue=3, n_channels=2,
+        lam_tasks=1.0,
+        pool=make_edge_pool(2), pool_ranges=random_pool_ranges(2)))
+    n = env.params.n_ue
+    s = env.reset(jax.random.PRNGKey(1), randomize=True)
+    g0 = np.asarray(s.geom)
+    acts = {"split": jnp.full((n,), env.n_actions_b - 1, jnp.int32),
+            "channel": jnp.zeros((n,), jnp.int32),
+            "route": jnp.zeros((n,), jnp.int32),
+            "power": jnp.full((n,), 0.3)}
+    done = False
+    for _ in range(64):
+        s, _, d, _ = env.step(s, acts)
+        if not done and not bool(d):
+            # until the first termination the draw is stable
+            np.testing.assert_array_equal(np.asarray(s.geom), g0)
+        if bool(d):
+            done = True
+            break
+    assert done, "full-local on lam=1 queues must terminate quickly"
+    s, _, _, _ = env.step(s, acts)   # post-done state has the redraw
+    assert not np.array_equal(np.asarray(s.geom), g0)
+
+
+def test_route_scorer_responds_to_server_features(mixed_fleet):
+    """Make server 1 infinitely unattractive IN THE OBSERVATION and check
+    a trained-from-init scorer shifts probability mass off it relative to
+    an attractive version — the route head conditions on pool features
+    (exactly what the mean-field shared policy could not do)."""
+    env = _env_for("randomized", mixed_fleet)
+    space = env.action_space
+    agent = init_agent(jax.random.PRNGKey(0), env, entity_policy=True)
+    s = env.reset(jax.random.PRNGKey(0), eval_mode=True, randomize=True)
+    good = jnp.asarray([[1.0, 1.0, 0.0], [1.0, 1.0, 0.0]], jnp.float32)
+    bad = jnp.asarray([[1.0, 1.0, 0.0], [25.0, 0.01, 4e-10]], jnp.float32)
+    masks = space.broadcast_masks(env.action_masks(), env.params.n_ue)
+    d_good = nets.entity_actor_forward(
+        agent["entity_actor"], space, env.observe_entities(
+            s._replace(geom=good)), masks)
+    d_bad = nets.entity_actor_forward(
+        agent["entity_actor"], space, env.observe_entities(
+            s._replace(geom=bad)), masks)
+    p_good = np.asarray(jax.nn.softmax(d_good["route"], -1))[:, 1]
+    p_bad = np.asarray(jax.nn.softmax(d_bad["route"], -1))[:, 1]
+    # an untrained scorer has no learned preference, but its logits MUST
+    # move when the server entity moves: identical logits would mean the
+    # features never reach the head
+    assert not np.allclose(p_good, p_bad)
+
+
+def test_entity_masks_still_bind(mixed_fleet):
+    """Sampling through the provider path never draws an infeasible
+    split: the provided route logits ride the same masking/sampling
+    machinery as branch heads."""
+    env = _env_for("pool", mixed_fleet)
+    space = env.action_space
+    agent = init_agent(jax.random.PRNGKey(0), env, entity_policy=True)
+    s = env.reset(jax.random.PRNGKey(1))
+    masks = space.broadcast_masks(env.action_masks(), env.params.n_ue)
+    dist = nets.entity_actor_forward(agent["entity_actor"], space,
+                                     env.observe_entities(s), masks)
+    assert dist["route"].shape == (env.params.n_ue, env.n_servers)
+    mask = np.asarray(env.action_masks()["split"])
+    for seed in range(100):
+        keys = jax.random.split(jax.random.PRNGKey(seed), env.params.n_ue)
+        a = jax.vmap(space.sample)(keys, dist, masks)
+        for ue, b in enumerate(np.asarray(a["split"])):
+            assert mask[ue, int(b)], (ue, int(b))
+        assert np.all(np.asarray(a["route"]) < env.n_servers)

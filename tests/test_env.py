@@ -29,7 +29,8 @@ def test_env_params_scalar_fields_are_jnp(env):
     EnvParams(...) that leaves the defaults in place."""
     from repro.env.mecenv import EnvParams
     for prm in (env.params,
-                EnvParams(*env.params[:len(EnvParams._fields) - 4])):
+                EnvParams(*env.params[:EnvParams._fields.index(
+                    "churn_rate")])):
         assert isinstance(prm.churn_rate, jnp.ndarray), type(prm.churn_rate)
         assert isinstance(prm.leave_rate, jnp.ndarray), type(prm.leave_rate)
         assert prm.churn_rate.dtype == jnp.float32

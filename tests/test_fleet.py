@@ -329,6 +329,77 @@ def test_observe_per_ue_churn_matches_golden():
     assert _feat_hex(env, s) == _GOLD_FEATS["churn"]
 
 
+# Golden entity-set observations (hex float32 blocks) pinned at the PR-5
+# introduction of `observe_entities`: the homogeneous single-server fleet
+# (degenerate [[1,1,0]] geometry, zero edge-service column), and the mixed
+# fleet through the 2- and 3-server demo pools. Any change to the entity
+# feature layout, the geometry encoding (slowness, not speed), or the
+# normalization constants shows up here.
+_GOLD_ENTITIES = {
+    "homo.ue": "295c6f3f0000000000000000cfb9133fcfb9133f0000803f3d0ad73e"
+               "2a7b013e0000803f3b069c3d857a7a3e0000803f295c6f3fa627c53e"
+               "0000c03f1f856b3f000000000000000011d3913e11d3913e0000803f"
+               "3d0ad73e2a7b013e0000803f3b069c3d857a7a3e0000803f295c6f3f"
+               "a627c53e0000c03f3333733f00000000000000004430963e4430963e"
+               "0000803f3d0ad73e2a7b013e0000803f3b069c3d857a7a3e0000803f"
+               "295c6f3fa627c53e0000c03f",
+    "homo.server": "0000803f0000803f000000000000c03f",
+    "homo.edge": "cfb9133f963a913f0000000011d3913e1c57b83f000000004430963e"
+                 "edb4b63f00000000",
+    "pool2.ue": "295c6f3f0000000000000000cfb9133fcfb9133f0000803f3d0ad73e"
+                "2a7b013e0000803f3b069c3d857a7a3e0000803f295c6f3fa627c53e"
+                "0000403f1f856b3f000000000000000011d3913e11d3913e0000803f"
+                "9a99193f56248e40abaa2a3f877b0140f5bd863e0000803f295c6f3f"
+                "a627c53e0000403f3333733f00000000000000004430963e4430963e"
+                "0000803f0ad7233ee510e93f0000803f09678c3f857a7a3e0000803f"
+                "295c6f3fa627c53e0000403f",
+    "pool2.server": "0000803f0000803f000000000000403f3333b33f0000803f"
+                    "aaaa2a3f0000403f",
+    "pool2.edge": "cfb9133f963a913f00000000efd04e3fa0337d3fa0013e3b11d3913e"
+                  "1c57b83f000000007d27cc3e8db3a53f74ad89404430963eedb4b63f"
+                  "000000009243d23e6611a43fa0013e3b",
+    "pool3.server": "0000803f0000803f000000000000003f3333b33f0000803f"
+                    "aaaa2a3f0000003f6666e63fcdcc4c3f555585400000003f",
+    "pool3.edge": "cfb9133f963a913f00000000efd04e3f9f337d3fa0013e3b07f4843f"
+                  "ed51343f4571943c11d3913e1c57b83f000000007d27cc3e8cb3a53f"
+                  "74ad8940f53d033fa0d9723f061fd7414430963eedb4b63f00000000"
+                  "9243d23e6611a43fa0013e3b702b073fb13c703f4571943c",
+}
+
+
+def test_observe_entities_matches_golden(mixed_fleet):
+    from repro.core.fleets import make_edge_pool
+    from repro.env.mecenv import OBS_ENT_EDGE, OBS_ENT_SRV, OBS_ENT_UE
+    plan = cnn_split_table(make_resnet18(101), 224)
+    cases = {
+        "homo": (MECEnv(make_env_params(plan, n_ue=3, n_channels=2)), 1),
+        "pool2": (MECEnv(make_env_params(mixed_fleet, n_channels=2,
+                                         pool=make_edge_pool(2))), 2),
+        "pool3": (MECEnv(make_env_params(mixed_fleet, n_channels=2,
+                                         pool=make_edge_pool(3))), 3),
+    }
+    for name, (env, n_srv) in cases.items():
+        s = env.reset(jax.random.PRNGKey(3))
+        obs = env.observe_entities(s)
+        assert obs["ue"].shape == (3, OBS_ENT_UE)
+        assert obs["server"].shape == (n_srv, OBS_ENT_SRV)
+        assert obs["edge"].shape == (3, n_srv, OBS_ENT_EDGE)
+        for block in ("ue", "server", "edge"):
+            key = f"{name}.{block}"
+            if key not in _GOLD_ENTITIES:
+                continue
+            got = np.asarray(obs[block], np.float32).tobytes().hex()
+            assert got == _GOLD_ENTITIES[key], key
+    # the single paper server is the degenerate [[1, 1, 0]] geometry and
+    # its edge-service column is identically zero (instant edge)
+    homo_obs = cases["homo"][0].observe_entities(
+        cases["homo"][0].reset(jax.random.PRNGKey(3)))
+    np.testing.assert_array_equal(np.asarray(homo_obs["server"])[0, :3],
+                                  [1.0, 1.0, 0.0])
+    np.testing.assert_array_equal(np.asarray(homo_obs["edge"])[:, :, 2],
+                                  0.0)
+
+
 def test_split_plan_invariants_enforced():
     from repro.core.split import _finalize
     rows = [(0.0, 0.0, 0.0, 0.0, 100.0, True),

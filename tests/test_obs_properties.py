@@ -1,4 +1,5 @@
-"""Properties of the per-UE featurized observation (`observe_per_ue`).
+"""Properties of the per-UE featurized observation (`observe_per_ue`) and
+the entity-set observation (`observe_entities`).
 
 Two layers, mirroring tests/test_churn_properties.py:
  * seeded tests that always run (no hypothesis needed), and
@@ -14,6 +15,13 @@ The contracts the weight-shared policy relies on:
     over the ACTIVE members only (identical in every row).
  3. the feature dimension is a constant: invariant to fleet size N, edge
     pool size E, and the widest action count B_max.
+
+And the ones the entity-set route scorer adds:
+ 4. SERVER-permutation equivariance: reordering the pool permutes the
+    server rows and the edge columns, leaves the UE rows bitwise intact,
+    and permutes the scorer's route-logit columns while leaving every
+    other head's distribution (numerically) unchanged.
+ 5. entity dimensions are constants independent of N, E, and B_max.
 """
 import jax
 import jax.numpy as jnp
@@ -114,10 +122,72 @@ def _standby_check(plans, mask, seed):
         agg[0, 2], (d * mask).sum() / (n_act * 100.0), rtol=1e-5)
 
 
+def _server_perm_check(plans, perm, seed):
+    """observe_entities(permuted pool, state) == column/row-permuted
+    observe_entities(pool, state): UE rows bitwise intact, server rows
+    and edge columns permuted; route logits permute their columns while
+    the other heads' distributions stay (numerically) put."""
+    from repro.core.fleets import EdgePool, make_edge_pool
+    from repro.rl import nets
+    from repro.rl.mahppo import init_agent
+    pool = make_edge_pool(3)
+    pool_p = EdgePool(tuple(pool.servers[i] for i in perm))
+    env = _env(plans, [0, 1, 2], pool=pool)
+    env_p = _env(plans, [0, 1, 2], pool=pool_p)
+    s = _rand_state(env, seed)
+    idx = np.asarray(perm)
+    f = jax.tree_util.tree_map(np.asarray, env.observe_entities(s))
+    f_p = jax.tree_util.tree_map(np.asarray, env_p.observe_entities(s))
+    np.testing.assert_array_equal(f_p["ue"], f["ue"])
+    np.testing.assert_array_equal(f_p["server"], f["server"][idx])
+    np.testing.assert_array_equal(f_p["edge"], f["edge"][:, idx])
+    # the same scorer parameters on both: route columns permute, the
+    # other heads see an identical (attention-pooled) context
+    agent = init_agent(jax.random.PRNGKey(0), env, entity_policy=True)
+    space = env.action_space
+    masks = space.broadcast_masks(env.action_masks(), 3)
+    d = nets.entity_actor_forward(agent["entity_actor"], space,
+                                  env.observe_entities(s), masks)
+    d_p = nets.entity_actor_forward(agent["entity_actor"], space,
+                                    env_p.observe_entities(s), masks)
+    np.testing.assert_array_equal(np.asarray(d_p["route"]),
+                                  np.asarray(d["route"])[:, idx])
+    for head in ("split", "channel"):
+        np.testing.assert_allclose(np.asarray(d_p[head]),
+                                   np.asarray(d[head]), rtol=1e-5,
+                                   atol=1e-6)
+    np.testing.assert_allclose(np.asarray(d_p["power"]["mu"]),
+                               np.asarray(d["power"]["mu"]), rtol=1e-5,
+                               atol=1e-6)
+
+
 def test_permutation_equivariant_seeded(plans):
     for perm in ([1, 0, 2], [2, 1, 0], [1, 2, 0]):
         for seed in (0, 7):
             _perm_check(plans, perm, seed)
+
+
+def test_server_permutation_equivariant_seeded(plans):
+    for perm in ([1, 0, 2], [2, 1, 0], [1, 2, 0]):
+        for seed in (0, 7):
+            _server_perm_check(plans, perm, seed)
+
+
+def test_entity_dims_invariant_to_n_e_and_tables(plans):
+    from repro.core.fleets import make_edge_pool
+    from repro.env.mecenv import OBS_ENT_EDGE, OBS_ENT_SRV, OBS_ENT_UE
+    for order in ([0], [0, 1, 2], [1, 1, 2, 0, 2, 1]):
+        for n_servers in (1, 2, 3):
+            pool = make_edge_pool(n_servers) if n_servers > 1 else None
+            env = _env(plans, order, pool=pool)
+            obs = env.observe_entities(env.reset(jax.random.PRNGKey(0)))
+            assert obs["ue"].shape == (len(order), OBS_ENT_UE)
+            assert obs["server"].shape == (n_servers, OBS_ENT_SRV)
+            assert obs["edge"].shape == (len(order), n_servers,
+                                         OBS_ENT_EDGE)
+            assert env.entity_dims == {"ue": OBS_ENT_UE,
+                                       "server": OBS_ENT_SRV,
+                                       "edge": OBS_ENT_EDGE}
 
 
 def test_standby_rows_zeroed_seeded(plans):
@@ -159,3 +229,9 @@ if given is not None:
            seed=st.integers(0, 2**31 - 1))
     def test_standby_rows_zeroed_property(plans, mask, seed):
         _standby_check(plans, mask, seed)
+
+    @settings(max_examples=10, deadline=None)
+    @given(perm=st.permutations([0, 1, 2]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_server_permutation_equivariant_property(plans, perm, seed):
+        _server_perm_check(plans, list(perm), seed)

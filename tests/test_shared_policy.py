@@ -95,6 +95,47 @@ _GOLD_TRAIN = {
 }
 
 
+# sha256 goldens captured at PR-4 HEAD (pre-entity-policy refactor) from
+# init_agent / one jitted iteration with shared_policy=True on the same
+# envs/config as _GOLD_TRAIN — proof that the SHARED flat path, like the
+# per-UE one, is bitwise-untouched by the PR-5 entity-set refactor.
+_GOLD_TRAIN_SHARED = {
+    "mixed": {
+        "init_sha": "3098bfbd6d61cdd32bf41943349eec045a386dda"
+                    "3af1c19237d3b48854335998",
+        "post_sha": "3fe1947046701aa42298bbfe6895272bdf29b6ca"
+                    "9e8e44a3ec8ff1803410defc",
+        "metrics": {"actor_loss": "9a995f3d", "completed": "00403941",
+                    "energy": "08eab33f", "entropy": "1fea7040",
+                    "ratio": "a28a7f3f", "reward_mean": "689402bf",
+                    "value_loss": "e23a5541"},
+        "key": "37594efbb116e571",
+    },
+    "pool": {
+        "init_sha": "89c5f31befebc13058372cf8919efbbe9e738c13"
+                    "b5a6329920d41a327c33d86f",
+        "post_sha": "c66a901e910cfc730492ccc3161d845116df2bb3"
+                    "d458cc8f5d600978cca4c496",
+        "metrics": {"actor_loss": "aa558fbd", "completed": "00803c41",
+                    "energy": "3d15e33f", "entropy": "eb9a8e40",
+                    "ratio": "2f44803f", "reward_mean": "ad81bbbe",
+                    "value_loss": "0a41d240"},
+        "key": "37594efbb116e571",
+    },
+    "churn": {
+        "init_sha": "3098bfbd6d61cdd32bf41943349eec045a386dda"
+                    "3af1c19237d3b48854335998",
+        "post_sha": "a0287b3af10923e5fc9a4d9cfac1c887778bb356"
+                    "63450d75f4bdaf93f563d3c5",
+        "metrics": {"actor_loss": "54d47dbe", "completed": "00c07741",
+                    "energy": "c20bab3f", "entropy": "892e2040",
+                    "ratio": "c7987f3f", "reward_mean": "a275b9be",
+                    "value_loss": "540e9940"},
+        "key": "37594efbb116e571",
+    },
+}
+
+
 def _env_for(name, fleet):
     if name == "pool":
         return MECEnv(make_env_params(fleet, n_channels=2,
@@ -116,6 +157,28 @@ def test_per_ue_actors_path_bitwise_unchanged_from_pr3(mixed_fleet, name):
     key = jax.random.PRNGKey(0)
     agent = init_agent(key, env)
     g = _GOLD_TRAIN[name]
+    assert _tree_sha(agent) == g["init_sha"]
+    opt = adamw_init(agent)
+    states = jax.vmap(env.reset)(jax.random.split(key, cfg.n_envs))
+    iteration = make_train_fns(env, cfg)
+    agent, opt, key, states, metrics = iteration(agent, opt, key, states)
+    assert _tree_sha(agent) == g["post_sha"]
+    got = {k: np.float32(v).tobytes().hex() for k, v in metrics.items()}
+    assert got == g["metrics"]
+    assert np.asarray(key, np.uint32).tobytes().hex() == g["key"]
+
+
+@pytest.mark.parametrize("name", ["mixed", "pool", "churn"])
+def test_shared_policy_path_bitwise_unchanged_from_pr4(mixed_fleet, name):
+    """shared_policy=True must be the PR-4 code path EXACTLY through the
+    entity-set refactor: same init key stream, same sample draws, same
+    log-probs/updates, same final collection key."""
+    env = _env_for(name, mixed_fleet)
+    cfg = MAHPPOConfig(iterations=1, horizon=64, n_envs=2, reuse=2,
+                       batch=32, shared_policy=True)
+    key = jax.random.PRNGKey(0)
+    agent = init_agent(key, env, shared_policy=True)
+    g = _GOLD_TRAIN_SHARED[name]
     assert _tree_sha(agent) == g["init_sha"]
     opt = adamw_init(agent)
     states = jax.vmap(env.reset)(jax.random.split(key, cfg.n_envs))
