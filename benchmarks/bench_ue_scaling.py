@@ -1,40 +1,190 @@
-"""Fig. 10 + Fig. 11: convergence and averaged inference overhead vs UE
-number (N = 3..10) on ResNet18."""
+"""Giant-fleet scaling bench: per-UE iteration cost N=16 -> 1024 and the
+fused pair-scorer kernel vs its naive reference.
+
+The seed-era version of this file trained full MAHPPO runs at the paper's
+N=3..10 and reported no timing at all. This one measures what the
+ROADMAP's metro-scale axis actually needs:
+
+* ``iter_us`` of ONE jitted entity-policy MAHPPO iteration at each rung
+  of an N ladder (16 / 64 / 256 / 1024), timed on the shared
+  ``_timing.paired_iter_samples`` interleaved harness. Every rung gets
+  the SAME sample budget: 4096 agent-frames collected per iteration and
+  1024 agent-rows per minibatch (a fleet of N UEs yields N transitions
+  per env frame, so ``horizon = 4096 / N`` — the bigger the fleet, the
+  faster it fills the budget). The headline number is **per-UE cost**
+  ``iter_us / N``: the entity agent is O(1) in params over N and E and
+  the per-frame work batches across the fleet, so the cost of an
+  equal-experience iteration stays near-flat in N and the per-UE cost
+  must FALL — the run.py ledger enforces per_ue(256) <= 0.5 *
+  per_ue(16).
+* the fused pair scorer (``kernels.ops.pair_scorer`` — decomposed first
+  layer, no materialized (N, E, 163) pair concat) raced against the
+  naive XLA reference (``kernels.ref.pair_scorer_ref`` — the default
+  entity path's op-for-op build), interleaved rounds, median of
+  per-round ratios. The ledger enforces parity (fp32 tolerance) and a
+  call_us win at N >= 256.
+
+Ladders: ``--smoke`` (CI) times {16, 256}; quick (default) and ``--full``
+time {16, 64, 256, 1024} — the fixed sample budget keeps even the
+N=1024 rung at roughly the N=16 iteration cost. Kernel rows always
+include the enforced N=256 point.
+"""
 from __future__ import annotations
 
+import time
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._timing import paired_iter_samples, paired_ratio
 from repro.core.cnn import make_resnet18
+from repro.core.fleets import make_edge_pool
 from repro.core.split import cnn_split_table
 from repro.env.mecenv import MECEnv, make_env_params
-from repro.rl.baselines import local_policy_eval
-from repro.rl.mahppo import MAHPPOConfig, evaluate_policy, train_mahppo
+from repro.kernels import ops, ref
+from repro.rl.mahppo import MAHPPOConfig
+
+# the ledger-enforced comparison rungs: per-UE cost at N_HI must be at
+# most SUBLINEAR_LIMIT x the per-UE cost at N_LO
+N_LO, N_HI = 16, 256
+SUBLINEAR_LIMIT = 0.5
+
+# equal-experience budget per timed iteration: every rung collects this
+# many agent-frames (UE transitions) and draws minibatches of this many
+# agent-rows, so the rungs compare the cost of the SAME amount of
+# learning signal at different fleet sizes
+AGENT_FRAMES = 4096
+ROWS_PER_MINIBATCH = 1024
 
 
-def run(quick=True, ue_numbers=None):
-    iters = 60 if quick else 200
-    ue_numbers = ue_numbers or ((3, 5, 8) if quick else tuple(range(3, 11)))
+def _env(plan, n):
+    return MECEnv(make_env_params(plan, n_ue=n, n_channels=2,
+                                  pool=make_edge_pool(2)))
+
+
+def _cfg(n):
+    # horizon = AGENT_FRAMES / n env frames fills the fixed sample
+    # budget (8 minibatch updates of ROWS_PER_MINIBATCH agent-rows at
+    # every rung: reuse * horizon/batch = 2 * 4). The ladder runs the
+    # fused-scorer path: the default entity obs stores (T, n_envs, N,
+    # E, 3) edge tensors in the trajectory and the loss re-materializes
+    # (batch, N, E, 163) pair concats — both scale as N x E and are
+    # exactly what the fused kernel path eliminates.
+    horizon = max(AGENT_FRAMES // n, 1)
+    return MAHPPOConfig(iterations=1, horizon=horizon,
+                        n_envs=min(8, horizon), reuse=2,
+                        batch=max(ROWS_PER_MINIBATCH // n, 1),
+                        entity_policy=True, fused_scorer=True)
+
+
+def _scorer_inputs(key, n, n_srv=3):
+    """Representative pair-scorer inputs at fleet size n: magnitudes
+    mirror a live env (distances 1..100 m, edge-tail work ~1e8 FLOP,
+    ~70% active fleet, paper-default physics consts)."""
+    ks = jax.random.split(key, 8)
+    ue_emb = jnp.tanh(jax.random.normal(ks[0], (n, 128)))
+    d = jax.random.uniform(ks[1], (n,), minval=1.0, maxval=100.0)
+    work = jax.random.uniform(ks[2], (n,), minval=5e7, maxval=5e8)
+    active = (jax.random.uniform(ks[3], (n,)) < 0.7).astype(jnp.float32)
+    geom = jax.random.uniform(ks[4], (n_srv, 3), minval=0.5, maxval=2.0)
+    consts = jnp.asarray([3.0, 0.5, 1e-9, 1e6 / 1e7, 0.5,
+                          n_srv * 2.0, 100.0, 1e12], jnp.float32)
+    srv_enc = {"w": jax.random.normal(ks[5], (4, 32)) * 0.5,
+               "b": jnp.zeros((32,))}
+    scorer = [{"w": jax.random.normal(ks[6], (163, 48)) * 0.1,
+               "b": jnp.zeros((48,))},
+              {"w": jax.random.normal(ks[7], (48, 1)) * 0.01,
+               "b": jnp.zeros((1,))}]
+    raw = {"d": d, "work": work, "active": active, "geom": geom,
+           "consts": consts}
+    return ue_emb, raw, srv_enc, scorer
+
+
+def _paired_call_us(fns_args, rounds=12):
+    """Interleaved per-call timing of several (fn, args) candidates —
+    the kernel-level analogue of ``paired_iter_samples``. Returns
+    seconds-per-call sample lists, one per candidate."""
+    for fn, args in fns_args:
+        jax.block_until_ready(fn(*args))        # compile + warm-up
+    times = [[] for _ in fns_args]
+    for _ in range(rounds):
+        for i, (fn, args) in enumerate(fns_args):
+            t0 = time.time()
+            jax.block_until_ready(fn(*args))
+            times[i].append(time.time() - t0)
+    return times
+
+
+def run_kernel(quick=True, smoke=False):
+    """Fused pair scorer vs naive reference: numeric parity (pallas
+    interpret AND decomposed XLA vs the oracle) plus an interleaved
+    call_us race of the fused fast path against the jitted reference."""
+    ns = (64, N_HI) if (smoke or quick) else (64, N_HI, 1024)
+    fused = jax.jit(lambda ue, raw, se, sc: ops.pair_scorer(ue, raw, se,
+                                                            sc))
+    naive = jax.jit(lambda ue, raw, se, sc: ref.pair_scorer_ref(
+        ue, raw["d"], raw["work"], raw["active"], raw["geom"],
+        raw["consts"], se["w"], se["b"], sc[0]["w"], sc[0]["b"],
+        sc[1]["w"], sc[1]["b"]))
+    rows, parity = [], []
+    for n in ns:
+        args = _scorer_inputs(jax.random.PRNGKey(n), n)
+        lf, sf = fused(*args)
+        lr, sr = naive(*args)
+        max_diff = float(jnp.abs(lf - lr).max())
+        lp, _ = ops.pair_scorer(*args[:4], impl="pallas")
+        pallas_diff = float(jnp.abs(lp - lr).max())
+        tf, tr = _paired_call_us([(fused, args), (naive, args)],
+                                 rounds=6 if smoke else 12)
+        ratio = paired_ratio(tf, tr)
+        rows.append({"n": n, "fused_us": 1e6 * float(np.median(tf)),
+                     "ref_us": 1e6 * float(np.median(tr)),
+                     "ratio": ratio, "max_diff": max_diff,
+                     "pallas_max_diff": pallas_diff})
+        if n >= N_HI:
+            # fp32 tolerance: logits are O(0.1); 1e-4 absolute is ~1e3 ulp
+            parity.append({"name": f"pair_scorer_parity_n{n}",
+                           "ratio": max_diff / 1e-4, "limit": 1.0})
+            parity.append({"name": f"pair_scorer_pallas_parity_n{n}",
+                           "ratio": pallas_diff / 1e-4, "limit": 1.0})
+            parity.append({"name": f"pair_scorer_vs_ref_call_n{n}",
+                           "ratio": ratio, "limit": 1.0})
+    return rows, parity
+
+
+def run(quick=True, smoke=False):
+    ladder = (N_LO, N_HI) if smoke else (N_LO, 64, N_HI, 1024)
     plan = cnn_split_table(make_resnet18(101), 224)
+    candidates = [(_env(plan, n), _cfg(n)) for n in ladder]
+    samples = paired_iter_samples(candidates, n_timed=3 if smoke else 5)
     rows = []
-    for n in ue_numbers:
-        env = MECEnv(make_env_params(plan, n_ue=n, n_channels=2))
-        cfg = MAHPPOConfig(iterations=iters, horizon=1024, n_envs=8)
-        agent, hist = train_mahppo(env, cfg, seed=0)
-        ev = evaluate_policy(env, agent, frames=64)
-        lo = local_policy_eval(env, frames=64)
-        beta = float(env.params.beta)
-        rows.append({
-            "n_ue": n,
-            "final_reward": float(np.mean([h["reward_mean"] for h in hist[-5:]])),
-            "t_ms": 1e3 * ev["t_task"], "e_mJ": 1e3 * ev["e_task"],
-            "local_t_ms": 1e3 * lo["t_task"], "local_e_mJ": 1e3 * lo["e_task"],
-            "overhead": ev["t_task"] + beta * ev["e_task"],
-            "local_overhead": lo["t_task"] + beta * lo["e_task"],
-        })
-    return {"rows": rows}
+    for (n, ts, (_, cfg)) in zip(ladder, samples, candidates):
+        iter_us = 1e6 * float(np.median(ts))
+        rows.append({"n_ue": n, "frames": cfg.horizon,
+                     "agent_frames": cfg.horizon * n,
+                     "iter_us": iter_us, "per_ue_us": iter_us / n})
+    i_lo, i_hi = ladder.index(N_LO), ladder.index(N_HI)
+    # per-UE sublinearity from PAIRED rounds: median over rounds of
+    # (t_hi/N_HI) / (t_lo/N_LO)
+    sub_ratio = paired_ratio(samples[i_hi], samples[i_lo]) * N_LO / N_HI
+    parity = [{"name": f"per_ue_sublinear_n{N_HI}_vs_n{N_LO}",
+               "ratio": sub_ratio, "limit": SUBLINEAR_LIMIT}]
+    kernel_rows, kernel_parity = run_kernel(quick=quick, smoke=smoke)
+    return {"rows": rows, "kernel_rows": kernel_rows,
+            "per_ue_sublinear": sub_ratio,
+            "parity": parity + kernel_parity}
 
 
 if __name__ == "__main__":
-    for r in run()["rows"]:
-        print({k: round(v, 4) if isinstance(v, float) else v
-               for k, v in r.items()})
+    out = run()
+    for r in out["rows"]:
+        print(f"n_ue={r['n_ue']:5d}  iter_us={r['iter_us']:>12.0f}  "
+              f"per_ue_us={r['per_ue_us']:>9.1f}")
+    for r in out["kernel_rows"]:
+        print(f"pair_scorer n={r['n']:5d}  fused_us={r['fused_us']:.0f}  "
+              f"ref_us={r['ref_us']:.0f}  ratio={r['ratio']:.2f}  "
+              f"max_diff={r['max_diff']:.2e}")
+    for p in out["parity"]:
+        ok = "OK " if p["ratio"] <= p["limit"] else "FAIL"
+        print(f"{ok} {p['name']}: {p['ratio']:.3f} (limit {p['limit']})")

@@ -9,8 +9,12 @@ above its limit makes the run EXIT NONZERO with a summary line, so CI
 catches hot-path regressions instead of scrolling past them. ``--smoke``
 runs the RL sections at tiny iteration counts (CI-sized) and still emits
 the standardized ``artifacts/BENCH_multi_server.json``,
-``artifacts/BENCH_generalization.json`` and ``artifacts/BENCH_entity.json``
-artifacts. The generalization ledger also enforces the zero-shot WINS:
+``artifacts/BENCH_generalization.json``, ``artifacts/BENCH_entity.json``
+and ``artifacts/BENCH_ue_scaling.json`` artifacts. The ue_scaling ledger
+enforces the giant-fleet story: per-UE jitted iteration cost at N=256 at
+most 0.5x the N=16 per-UE cost, and the fused pair-scorer kernel beating
+its naive reference on call_us at N>=256 while matching it numerically.
+The generalization ledger also enforces the zero-shot WINS:
 shared/greedy at n8/n16, and the entity policy vs nearest-server greedy
 on the inverted alt-pool layout and an unseen E=3 pool.
 """
@@ -128,18 +132,35 @@ def main() -> None:
         for k, v in out.items():
             _emit(f"fig9_{k}", us, f"final_reward={v:.4f}")
 
-    if want("scaling"):
-        _section("fig10/11 UE-number scaling")
+    if want("ue_scaling"):
+        _section("giant-fleet scaling (per-UE iteration cost N=16..1024 "
+                 "+ fused pair-scorer kernel)")
         from benchmarks import bench_ue_scaling
-        t0 = time.time()
-        out = bench_ue_scaling.run(quick=quick)
-        results["scaling"] = out
-        us = (time.time() - t0) * 1e6 / max(len(out["rows"]), 1)
+        out = bench_ue_scaling.run(quick=quick, smoke=smoke)
+        results["ue_scaling"] = out
         for r in out["rows"]:
-            _emit(f"fig11_n{r['n_ue']}", us,
-                  f"t_ms={r['t_ms']:.1f};e_mJ={r['e_mJ']:.1f};"
-                  f"local_t={r['local_t_ms']:.1f};local_e={r['local_e_mJ']:.1f};"
-                  f"overhead={r['overhead']:.4f};local_ovh={r['local_overhead']:.4f}")
+            _emit(f"ue_scaling_n{r['n_ue']}", r["iter_us"],
+                  f"per_ue_us={r['per_ue_us']:.1f};frames={r['frames']}")
+        for r in out["kernel_rows"]:
+            _emit(f"pair_scorer_n{r['n']}", r["fused_us"],
+                  f"ref_us={r['ref_us']:.1f};ratio={r['ratio']:.2f};"
+                  f"max_diff={r['max_diff']:.2e};"
+                  f"pallas_max_diff={r['pallas_max_diff']:.2e}")
+        _emit("ue_scaling_per_ue_sublinear", 0.0,
+              f"ratio={out['per_ue_sublinear']:.3f};"
+              f"limit={bench_ue_scaling.SUBLINEAR_LIMIT}")
+        for p in out["parity"]:
+            guard("ue_scaling", p["name"], p["ratio"], p["limit"])
+        os.makedirs("artifacts", exist_ok=True)
+        artifact = {"bench": "ue_scaling", "schema": 1,
+                    "smoke": smoke, "quick": quick,
+                    "rows": out["rows"],
+                    "kernel_rows": out["kernel_rows"],
+                    "per_ue_sublinear": out["per_ue_sublinear"],
+                    "parity": out["parity"]}
+        with open("artifacts/BENCH_ue_scaling.json", "w") as f:
+            json.dump(artifact, f, indent=1, default=float)
+        print("# wrote artifacts/BENCH_ue_scaling.json", flush=True)
 
     if want("beta"):
         _section("fig12 beta trade-off")

@@ -100,7 +100,8 @@ def run_split_forward(params, cfg, tokens, split_layer, ae, bits=8):
 
 def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
                    leave_rate=0.0, n_servers=1, shared_policy=False,
-                   entity_policy=False):
+                   entity_policy=False, n_ue=4, fused_scorer=False,
+                   n_shards=1):
     """Mixed-fleet scheduling: per-UE split tables + device tiers end-to-end
     through MAHPPO, vs the non-coordinating greedy heuristic. With nonzero
     churn/leave rates the fleet is DYNAMIC: UEs join from a standby pool and
@@ -117,7 +118,7 @@ def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
     from repro.rl.heuristics import greedy_eval
     from repro.rl.mahppo import MAHPPOConfig, evaluate_policy, train_mahppo
 
-    fleet = make_mixed_fleet(arch)
+    fleet = make_mixed_fleet(arch, n_ue=n_ue)
     print("fleet:")
     for i, (name, prof) in enumerate(zip(fleet.names, fleet.profiles)):
         feas = int(fleet.feasible[i].sum())
@@ -170,10 +171,16 @@ def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
     extra = " over randomized pool geometries" if randomize else ""
     print(f"\ntraining MAHPPO ({mode}) on the mixed fleet{extra} "
           f"({iterations} iterations)...")
+    if fused_scorer:
+        print("  fused pair-scorer kernel path (observe_entities_raw)")
+    if n_shards > 1:
+        print(f"  rollouts sharded over {n_shards} devices "
+              f"({len(jax.devices())} visible)")
     cfg = MAHPPOConfig(iterations=iterations, horizon=512, n_envs=4,
                        reuse=4, shared_policy=shared_policy,
                        entity_policy=entity_policy,
-                       randomize_pool=randomize)
+                       randomize_pool=randomize,
+                       fused_scorer=fused_scorer, n_shards=n_shards)
     agent, hist = train_mahppo(env, cfg, seed=0,
                                log_cb=lambda r: print(
                                    f"  iter {r['iteration']:3d} "
@@ -205,7 +212,9 @@ def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
         print(f"loadbal: overhead {load['overhead']:.4f}  "
               f"(route={load['route']})")
 
-    if shared_policy or entity_policy:
+    if (shared_policy or entity_policy) and n_ue <= 16:
+        # (skipped at giant N: instantiating N per-UE actors just for the
+        # comparison means N obs_dim-sized orthogonal inits)
         from repro.rl.mahppo import init_agent
         n_pol = nets.param_count(agent.get("actor")
                                  or agent["entity_actor"])
@@ -295,17 +304,35 @@ def main():
                          "geometry resampled every episode — transfers "
                          "zero-shot across pool layouts AND sizes "
                          "(implies --fleet; defaults --servers to 2)")
+    ap.add_argument("--n-ue", type=int, default=4, metavar="N",
+                    help="fleet size: cycles the 4-UE device mix to N "
+                         "UEs (the entity policy stays O(1) params in N "
+                         "— try 256; implies --fleet)")
+    ap.add_argument("--fused-scorer", action="store_true",
+                    help="route the entity pair scorer through the fused "
+                         "kernel path (kernels.ops.pair_scorer; implies "
+                         "--entity-policy) — same logits, no (N, E, .) "
+                         "intermediates, the giant-fleet hot path")
+    ap.add_argument("--n-shards", type=int, default=1, metavar="K",
+                    help="shard rollout collection over K devices (on "
+                         "CPU set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=K before launch; implies --fleet)")
     ap.add_argument("--iterations", type=int, default=15)
     args = ap.parse_args()
 
     if args.entity_policy and args.shared_policy:
         ap.error("pick one of --entity-policy / --shared-policy")
+    if args.fused_scorer and args.shared_policy:
+        ap.error("--fused-scorer fuses the entity route scorer; it "
+                 "cannot combine with --shared-policy")
+    if args.fused_scorer:
+        args.entity_policy = True
     if args.entity_policy and args.servers < 2:
         args.servers = 2       # the route scorer needs a pool to score
     churn = (args.churn or args.churn_rate is not None
              or args.leave_rate is not None)
     if args.fleet or churn or args.servers > 1 or args.shared_policy \
-            or args.entity_policy:
+            or args.entity_policy or args.n_ue != 4 or args.n_shards > 1:
         run_fleet_demo(
             args.arch, args.iterations,
             churn_rate=(0.2 if args.churn_rate is None
@@ -313,7 +340,8 @@ def main():
             leave_rate=(0.1 if args.leave_rate is None
                         else args.leave_rate) if churn else 0.0,
             n_servers=args.servers, shared_policy=args.shared_policy,
-            entity_policy=args.entity_policy)
+            entity_policy=args.entity_policy, n_ue=args.n_ue,
+            fused_scorer=args.fused_scorer, n_shards=args.n_shards)
         return
 
     cfg = reduced(get_config(args.arch), n_layers=4)

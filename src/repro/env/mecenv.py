@@ -297,6 +297,14 @@ class MECEnv:
         cnt = np.maximum(offl_feas.sum(axis=1), 1)
         self._ue_work_mean = jnp.asarray(
             (work[:, :-1] * offl_feas).sum(axis=1) / cnt, jnp.float32)
+        # physics constants for the fused pair-scorer kernel (layout in
+        # kernels/pair_scorer.py) — the kernel package stays env-free
+        n_srv = int(params.pool_geom.shape[0])
+        self._scorer_consts = jnp.asarray([
+            params.pathloss, params.p_max, params.sigma.mean(),
+            params.omega_cell.mean() / RATE_NORM, params.t0,
+            n_srv * self.n_channels, DIST_NORM, 1.0 / EDGE_SLOW_NORM,
+        ], jnp.float32)
         discrete = [DiscreteHead("split", self.n_actions_b),
                     DiscreteHead("channel", self.n_channels)]
         if self.multi_server:
@@ -474,6 +482,49 @@ class MECEnv:
         te = self._ue_work_mean[:, None] * geom[None, :, 2] / p.t0
         edge = jnp.stack([dist_ne / DIST_NORM, rate, te], axis=-1)
         return {"ue": ue, "server": srv, "edge": edge}
+
+    def observe_entities_raw(self, s: EnvState):
+        """Kernel-path variant of ``observe_entities``: the IDENTICAL
+        per-UE "ue" rows, but instead of materializing the (N, E, 3) edge
+        tensor (and the (E, 4) server rows derived from it) the pytree
+        carries the raw per-UE vectors + live geometry + physics constants
+        that ``kernels.ops.pair_scorer`` consumes — the edge features, the
+        per-(server, channel) occupancy reduction, and the server
+        embedding are then fused into the scorer kernel and the O(N*E)
+        blocks never hit memory (nor the stored trajectory: the raw block
+        is O(N + E) per step instead of O(N*E)).
+
+        Selected by ``MAHPPOConfig.fused_scorer`` / ``evaluate_policy(...,
+        fused_scorer=True)``; the default path never calls this, so its
+        observation pytree (and goldens) are untouched."""
+        p = self.params
+        n = p.n_ue
+        geom = self._geom(s)                                   # (E, 3)
+        act = s.active.astype(jnp.float32)
+        own = jnp.stack([
+            s.k / jnp.maximum(p.lam_tasks, 1.0),
+            s.l / p.t0,
+            s.n / BITS_NORM,
+            s.d / DIST_NORM,
+            s.d * geom[:, 0].min() / DIST_NORM,
+        ], axis=1) * act[:, None]
+        n_act = jnp.maximum(act.sum(), 1.0)
+        per_slot = act.sum() / (geom.shape[0] * self.n_channels)
+        fleet = jnp.stack([
+            act.sum() / n,
+            (s.k * act).sum() / (n_act * jnp.maximum(p.lam_tasks, 1.0)),
+            (s.d * act).sum() / (n_act * DIST_NORM),
+            per_slot,
+        ])
+        ue = jnp.concatenate([
+            own,
+            act[:, None],
+            self._ue_static,
+            jnp.broadcast_to(fleet, (n, OBS_UE_FLEET)),
+        ], axis=1)
+        return {"ue": ue, "raw": {
+            "d": s.d, "work": self._ue_work_mean, "active": act,
+            "geom": geom, "consts": self._scorer_consts}}
 
     def action_masks(self, s: EnvState = None):
         """Per-head feasibility masks ({head: (N, n) bool}; heads without

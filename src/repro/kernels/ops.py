@@ -62,3 +62,28 @@ def ssd_intra(xh, dt, la, Bm, Cm, *, interpret=None):
     from repro.kernels import ssd_intra as _ssd
     interpret = _interpret_default() if interpret is None else interpret
     return _ssd.ssd_intra(xh, dt, la, Bm, Cm, interpret=interpret)
+
+
+def pair_scorer(ue_emb, raw, srv_enc, scorer, *, impl=None, interpret=None):
+    """Fused entity route scorer -> (route_logits (N, E), srv_emb (E, S)).
+
+    ``raw`` is the env's kernel-path observation block
+    (``MECEnv.observe_entities_raw``: {"d", "work", "active", "geom",
+    "consts"}); ``srv_enc``/``scorer`` are the matching subtrees of
+    ``nets.init_entity_actor``. ``impl``: "pallas" | "xla" | None
+    (autodetect: the Pallas kernel on TPU, the decomposed XLA form
+    elsewhere — interpret-mode Pallas is for parity testing, not speed).
+    Override with REPRO_PAIR_SCORER_IMPL."""
+    from repro.kernels import pair_scorer as _ps
+    if impl is None:
+        impl = os.environ.get("REPRO_PAIR_SCORER_IMPL") \
+            or ("pallas" if jax.default_backend() == "tpu" else "xla")
+    args = (ue_emb, raw["d"], raw["work"], raw["active"], raw["geom"],
+            raw["consts"], srv_enc["w"], srv_enc["b"],
+            scorer[0]["w"], scorer[0]["b"], scorer[1]["w"], scorer[1]["b"])
+    if impl == "xla":
+        return _ps.pair_scorer_xla(*args)
+    if impl != "pallas":
+        raise ValueError(f"unknown pair_scorer impl {impl!r}")
+    interpret = _interpret_default() if interpret is None else interpret
+    return _ps.pair_scorer_pallas(*args, interpret=interpret)

@@ -53,3 +53,46 @@ def decode_attention_ref(q, k, v, pos, idx):
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
     return o.reshape(b, hq, d)
+
+
+def pair_scorer_ref(ue_emb, d, work, active, geom, consts,
+                    w_srv, b_srv, w1, b1, w2, b2):
+    """Naive (UE, server) pair scorer: the oracle for
+    ``pair_scorer.pair_scorer_pallas`` / ``pair_scorer_xla``.
+
+    Deliberately mirrors the DEFAULT entity path op-for-op — the edge
+    tensor build of ``MECEnv.observe_entities`` followed by
+    ``nets.entity_trunk``'s materialized (N, E, d_ue+S+3) pair concat and
+    scorer MLP — so fused-vs-ref parity is also fused-vs-default parity.
+    ``consts`` is the env-built 8-vector (see kernels/pair_scorer.py);
+    ``active`` enters only through the per-(server, channel) occupancy
+    scalar. Returns (route_logits (N, E), srv_emb (E, S))."""
+    f32 = jnp.float32
+    ue_emb = ue_emb.astype(f32)
+    d = d.astype(f32)
+    work = work.astype(f32)
+    active = active.astype(f32)
+    geom = geom.astype(f32)
+    consts = consts.astype(f32)
+    n, d_ue = ue_emb.shape
+    e = geom.shape[0]
+    per_slot = active.sum() / consts[5]
+    srv_rows = jnp.concatenate([
+        geom * jnp.stack([jnp.float32(1.0), jnp.float32(1.0), consts[7]]),
+        jnp.broadcast_to(per_slot, (e,))[:, None],
+    ], axis=1)
+    srv = jnp.tanh(srv_rows @ w_srv + b_srv)                   # (E, S)
+    dist_ne = d[:, None] * geom[None, :, 0]                    # (N, E)
+    g_ne = jnp.power(jnp.maximum(dist_ne, 1.0), -consts[0])
+    rate = (geom[:, 1] * consts[3])[None, :] \
+        * jnp.log2(1.0 + consts[1] * g_ne / consts[2])
+    te = work[:, None] * geom[None, :, 2] / consts[4]
+    edge = jnp.stack([dist_ne / consts[6], rate, te], axis=-1)
+    pair = jnp.concatenate([
+        jnp.broadcast_to(ue_emb[:, None, :], (n, e, d_ue)),
+        jnp.broadcast_to(srv[None, :, :], (n, e, srv.shape[-1])),
+        edge,
+    ], axis=-1)
+    h = jnp.tanh(pair @ w1 + b1)
+    logits = (h @ w2 + b2)[..., 0]                             # (N, E)
+    return logits, srv

@@ -43,6 +43,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.env.mecenv import MECEnv
 from repro.optim import adamw_init, adamw_update
@@ -66,10 +68,33 @@ class MAHPPOConfig:
     shared_policy: bool = False  # one weight-shared actor over per-UE rows
     entity_policy: bool = False  # entity-set obs + per-server route scorer
     randomize_pool: bool = False  # resample EdgePool geometry per episode
+    n_shards: int = 1            # devices to shard the env axis across
+    fused_scorer: bool = False   # fused pair-scorer kernel (entity mode)
 
     def __post_init__(self):
         if self.shared_policy and self.entity_policy:
             raise ValueError("pick one of shared_policy / entity_policy")
+        if self.horizon % self.n_envs != 0:
+            # collect() runs T = horizon // n_envs scan steps per env; a
+            # non-divisible horizon would silently DROP the remainder
+            # frames (horizon=1000, n_envs=8 trains on 1000 - 1000 % 8 =
+            # 1000 frames, but horizon=1026 would train on 1024) — make
+            # the truncation an error instead of a quiet budget cut
+            raise ValueError(
+                f"horizon={self.horizon} is not divisible by "
+                f"n_envs={self.n_envs}: collect() would silently drop "
+                f"the {self.horizon % self.n_envs} remainder frames — "
+                f"pick horizon as a multiple of n_envs")
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+        if self.n_envs % self.n_shards != 0:
+            raise ValueError(
+                f"n_envs={self.n_envs} must be divisible by "
+                f"n_shards={self.n_shards}: rollouts shard whole envs "
+                f"across devices")
+        if self.fused_scorer and not self.entity_policy:
+            raise ValueError("fused_scorer fuses the entity route "
+                             "scorer — set entity_policy=True")
         if self.randomize_pool and not self.entity_policy:
             # flat observations (observe / observe_per_ue) describe the
             # CONSTRUCTION-time pool only; training them on resampled
@@ -78,6 +103,21 @@ class MAHPPOConfig:
             raise ValueError("randomize_pool trains on resampled pool "
                              "geometry that only the entity observation "
                              "exposes — set entity_policy=True")
+
+
+def _env_mesh(n_shards):
+    """A 1-D device mesh over the env axis (named "env"). Raises early —
+    at trace-fn build time, not inside jit — when the host doesn't expose
+    enough devices (on CPU hosts set
+    XLA_FLAGS=--xla_force_host_platform_device_count=N before importing
+    jax to split the host into N virtual devices)."""
+    devs = jax.devices()
+    if len(devs) < n_shards:
+        raise ValueError(
+            f"n_shards={n_shards} but only {len(devs)} device(s) "
+            f"visible; on CPU export XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_shards}")
+    return Mesh(np.array(devs[:n_shards]), ("env",))
 
 
 def init_agent(key, env: MECEnv, *, shared_policy=False,
@@ -165,7 +205,8 @@ def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
                                         agent["critic"], space, obs, masks)
 
     def _observe(states):
-        fn = env.observe_entities if entity \
+        fn = (env.observe_entities_raw if cfg.fused_scorer
+              else env.observe_entities) if entity \
             else env.observe_per_ue if shared else env.observe
         return jax.vmap(fn)(states)
 
@@ -222,6 +263,30 @@ def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
         last_obs = _observe(states)
         last_v = jax.vmap(lambda o: _value(agent, o))(last_obs)
         return states, key, traj, last_v
+
+    # ---- sharded rollouts: the SAME collect body, shard_mapped over the
+    # env axis. Each shard folds its mesh index into the rollout key
+    # (decorrelated streams without any cross-device key plumbing) and
+    # steps only its local n_envs / n_shards envs; auto-reset is already
+    # batched inside env.step (a jnp.where over the done mask), so a
+    # sharded step never syncs per-env or cross-shard. The update step
+    # consumes the env-sharded trajectory as-is — GSPMD inserts the
+    # gathers for the fleet-global minibatch draws. Built only when
+    # cfg.n_shards > 1: the single-device iteration below traces exactly
+    # the pre-sharding graph (key stream included).
+    if cfg.n_shards > 1:
+        mesh = _env_mesh(cfg.n_shards)
+
+        def _collect_local(agent, key, states):
+            key = jax.random.fold_in(key, jax.lax.axis_index("env"))
+            states, _, traj, last_v = collect(agent, key, states)
+            return states, traj, last_v
+
+        collect_sharded = shard_map(
+            _collect_local, mesh=mesh,
+            in_specs=(P(), P(), P("env")),
+            out_specs=(P("env"), P(None, "env"), P("env")),
+            check_rep=False)
 
     def loss_fn(agent, batch):
         obs, actions = batch["obs"], batch["actions"]
@@ -294,7 +359,10 @@ def make_train_fns(env: MECEnv, cfg: MAHPPOConfig):
     @jax.jit
     def iteration(agent, opt, key, states):
         key, k1, k2 = jax.random.split(key, 3)
-        states, key, traj, last_v = collect(agent, k1, states)
+        if cfg.n_shards > 1:
+            states, traj, last_v = collect_sharded(agent, k1, states)
+        else:
+            states, key, traj, last_v = collect(agent, k1, states)
         agent, opt, metrics = update(agent, opt, k2, traj, last_v)
         metrics = dict(metrics,
                        reward_mean=traj["reward"].mean(),
@@ -339,7 +407,8 @@ def train_mahppo(env: MECEnv, cfg: MAHPPOConfig, seed=0,
 
 # ----------------------------------------------------------------- eval
 def evaluate_policy(env: MECEnv, agent, *, frames=64, seed=0,
-                    deterministic=True):
+                    deterministic=True, fused_scorer=False, n_envs=1,
+                    n_shards=1):
     """Run eval-mode episodes; report per-task latency/energy (Eq. 7/8
     realized under the learned policy) plus cumulative reward. On dynamic
     fleets the per-task overhead is aggregated over ACTIVE UEs only —
@@ -352,13 +421,23 @@ def evaluate_policy(env: MECEnv, agent, *, frames=64, seed=0,
     N/E-independent. An entity agent ({"entity_actor": ...}) runs on
     `env.observe_entities` pytrees — transferring across pool SIZE too,
     since its route logits are scored per server rather than emitted by a
-    fixed-width branch."""
+    fixed-width branch.
+
+    ``n_envs`` > 1 averages over that many independent eval episodes
+    (vmapped rollouts, each with its own key); ``n_shards`` > 1
+    additionally shard_maps the batch over devices (see `_env_mesh`).
+    The default ``n_envs=1`` path traces exactly the single-rollout
+    graph. ``fused_scorer`` routes an entity agent through the fused
+    pair-scorer kernel (``env.observe_entities_raw``)."""
     space = env.action_space
     n_ue = env.params.n_ue
     shared = "actor" in agent
     entity = "entity_actor" in agent
+    if fused_scorer and not entity:
+        raise ValueError("fused_scorer needs an entity agent")
+    obs_entities = env.observe_entities_raw if fused_scorer \
+        else env.observe_entities
 
-    @jax.jit
     def rollout(key):
         s = env.reset(key, eval_mode=True)
 
@@ -368,8 +447,7 @@ def evaluate_policy(env: MECEnv, agent, *, frames=64, seed=0,
             if entity:
                 masks = space.broadcast_masks(masks, n_ue)
                 dist = nets.entity_actor_forward(
-                    agent["entity_actor"], space, env.observe_entities(s),
-                    masks)
+                    agent["entity_actor"], space, obs_entities(s), masks)
             elif shared:
                 masks = space.broadcast_masks(masks, n_ue)
                 dist = nets.shared_actor_forward(
@@ -399,7 +477,24 @@ def evaluate_policy(env: MECEnv, agent, *, frames=64, seed=0,
         _, out = jax.lax.scan(body, s, jax.random.split(key, frames))
         return out
 
-    out = rollout(jax.random.PRNGKey(seed))
+    if n_envs == 1 and n_shards == 1:
+        out = jax.jit(rollout)(jax.random.PRNGKey(seed))
+    else:
+        # batched eval: independent episodes under vmapped rollouts,
+        # optionally shard_mapped over the env axis. Each episode's
+        # computation depends only on its own key, so the sharded and
+        # unsharded batched paths produce identical per-env outputs (the
+        # aggregation below is numpy, outside any reduction-order change)
+        if n_envs % n_shards != 0:
+            raise ValueError(f"n_envs={n_envs} must be divisible by "
+                             f"n_shards={n_shards}")
+        fn = jax.vmap(rollout)
+        if n_shards > 1:
+            fn = shard_map(fn, mesh=_env_mesh(n_shards),
+                           in_specs=(P("env"),), out_specs=P("env"),
+                           check_rep=False)
+        out = jax.jit(fn)(jax.random.split(jax.random.PRNGKey(seed),
+                                           n_envs))
     res = {k: float(np.asarray(v).mean()) for k, v in out.items()}
     res["t_task"] = res.pop("t_sum") / max(res["w_sum"], 1e-9)
     res["e_task"] = res.pop("e_sum") / max(res.pop("w_sum"), 1e-9)

@@ -112,8 +112,22 @@ def entity_trunk(p, obs):
     route_logits (N, E), ctx (N, S)). Policy heads AND the value head
     read these — one encoding per step (XLA CSE merges the actor and
     critic passes inside a jitted step), and the value gradient shapes
-    the same representations the scorer routes with."""
+    the same representations the scorer routes with.
+
+    An obs pytree carrying a "raw" block (``env.observe_entities_raw``,
+    selected by the ``fused_scorer`` flag) routes the pair scorer through
+    the fused kernel (``kernels.ops.pair_scorer``): the edge-feature
+    build, the per-(server, channel) occupancy reduction, the server
+    embedding, and the pair MLP run as one fused op and the (N, E, ·)
+    intermediates never materialize. The default entity obs takes the
+    path below unchanged."""
     ue = jnp.tanh(_mlp(p["ue_enc"], obs["ue"]))                # (N, 128)
+    if "raw" in obs:
+        from repro.kernels import ops as _kops
+        route_logits, srv = _kops.pair_scorer(ue, obs["raw"],
+                                              p["srv_enc"], p["scorer"])
+        ctx = jax.nn.softmax(route_logits, axis=-1) @ srv      # (N, S)
+        return ue, srv, route_logits, ctx
     srv = jnp.tanh(obs["server"] @ p["srv_enc"]["w"]
                    + p["srv_enc"]["b"])                        # (E, S)
     n, e = obs["edge"].shape[:2]

@@ -238,3 +238,65 @@ def test_entity_masks_still_bind(mixed_fleet):
         for ue, b in enumerate(np.asarray(a["split"])):
             assert mask[ue, int(b)], (ue, int(b))
         assert np.all(np.asarray(a["route"]) < env.n_servers)
+
+
+@pytest.mark.parametrize("name", ["pool", "churn", "randomized"])
+def test_fused_scorer_matches_default_route_logits(mixed_fleet, name):
+    """Kernel on/off equivalence (PR 6): the fused pair-scorer obs path
+    (``observe_entities_raw`` -> ``kernels.ops.pair_scorer``) produces
+    the same route logits, distributions, and values as the default
+    materialized entity path, on live env states — including churn
+    states with inactive UEs."""
+    env = _env_for(name, mixed_fleet)
+    space = env.action_space
+    agent = init_agent(jax.random.PRNGKey(0), env, entity_policy=True)
+    s = env.reset(jax.random.PRNGKey(2), randomize=(name == "randomized"))
+    # advance a few frames so churn envs carry genuinely inactive UEs
+    for i in range(3):
+        masks = space.broadcast_masks(env.action_masks(s),
+                                      env.params.n_ue)
+        dist = nets.entity_actor_forward(agent["entity_actor"], space,
+                                         env.observe_entities(s), masks)
+        a = jax.vmap(space.sample)(
+            jax.random.split(jax.random.PRNGKey(i), env.params.n_ue),
+            dist, masks)
+        s = env.step(s, a)[0]
+    masks = space.broadcast_masks(env.action_masks(s), env.params.n_ue)
+    d_def = nets.entity_actor_forward(agent["entity_actor"], space,
+                                      env.observe_entities(s), masks)
+    d_fused = nets.entity_actor_forward(agent["entity_actor"], space,
+                                        env.observe_entities_raw(s), masks)
+    if env.multi_server:            # churn env is single-server: no route
+        np.testing.assert_allclose(np.asarray(d_fused["route"]),
+                                   np.asarray(d_def["route"]),
+                                   rtol=1e-5, atol=1e-6)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6),
+        d_fused, d_def)
+    v_def = nets.entity_value_forward(agent["entity_actor"],
+                                      agent["critic"],
+                                      env.observe_entities(s))
+    v_fused = nets.entity_value_forward(agent["entity_actor"],
+                                        agent["critic"],
+                                        env.observe_entities_raw(s))
+    np.testing.assert_allclose(np.asarray(v_fused), np.asarray(v_def),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fused_scorer_training_iteration_runs(mixed_fleet):
+    """cfg.fused_scorer=True trains one jitted iteration end-to-end and
+    the config refuses fused_scorer without entity_policy."""
+    env = _env_for("pool", mixed_fleet)
+    cfg = MAHPPOConfig(iterations=1, horizon=32, n_envs=2, reuse=1,
+                       batch=16, entity_policy=True, fused_scorer=True)
+    key = jax.random.PRNGKey(0)
+    agent = init_agent(key, env, entity_policy=True)
+    opt = adamw_init(agent)
+    states = init_states(env, cfg, key)
+    iteration = make_train_fns(env, cfg)
+    agent, opt, key, states, metrics = iteration(agent, opt, key, states)
+    assert np.isfinite(float(metrics["reward_mean"]))
+    assert np.isfinite(float(metrics["actor_loss"]))
+    with pytest.raises(ValueError, match="entity_policy"):
+        MAHPPOConfig(fused_scorer=True)

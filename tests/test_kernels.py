@@ -87,3 +87,104 @@ def test_decode_attention_matches_model_flash():
     o_ref = ref.decode_attention_ref(q[:, 0], k, v, pos, idx)
     np.testing.assert_allclose(np.asarray(o_flash[:, 0]), np.asarray(o_ref),
                                rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------ fused pair scorer (PR 6)
+# route-scorer fusion: edge-feature build + occupancy reduction + server
+# embed + decomposed pair MLP in one op, raced against the naive oracle
+# that mirrors the default entity path op-for-op.
+
+def _pair_scorer_inputs(key, n, e, dtype=jnp.float32):
+    """Live-env-magnitude inputs at fleet size n, pool size e."""
+    ks = jax.random.split(key, 8)
+    ue_emb = jnp.tanh(jax.random.normal(ks[0], (n, 128))).astype(dtype)
+    raw = {
+        "d": jax.random.uniform(ks[1], (n,), minval=1.0,
+                                maxval=100.0).astype(dtype),
+        "work": jax.random.uniform(ks[2], (n,), minval=5e7,
+                                   maxval=5e8).astype(dtype),
+        "active": (jax.random.uniform(ks[3], (n,)) < 0.7).astype(dtype),
+        "geom": jax.random.uniform(ks[4], (e, 3), minval=0.5,
+                                   maxval=2.0).astype(dtype),
+        "consts": jnp.asarray([3.0, 0.5, 1e-9, 0.1, 0.5, e * 2.0,
+                               100.0, 1e-12], dtype),
+    }
+    srv_enc = {"w": jax.random.normal(ks[5], (4, 32)) * 0.5,
+               "b": jnp.zeros((32,))}
+    scorer = [{"w": jax.random.normal(ks[6], (163, 48)) * 0.1,
+               "b": jnp.zeros((48,))},
+              {"w": jax.random.normal(ks[7], (48, 1)) * 0.01,
+               "b": jnp.zeros((1,))}]
+    return ue_emb, raw, srv_enc, scorer
+
+
+def _pair_ref(ue_emb, raw, srv_enc, scorer):
+    return ref.pair_scorer_ref(
+        ue_emb, raw["d"], raw["work"], raw["active"], raw["geom"],
+        raw["consts"], srv_enc["w"], srv_enc["b"], scorer[0]["w"],
+        scorer[0]["b"], scorer[1]["w"], scorer[1]["b"])
+
+
+@pytest.mark.parametrize("n,e", [(1, 1), (7, 2), (64, 3), (300, 5)])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_pair_scorer_matches_ref(n, e, impl):
+    """Fused scorer == naive oracle over an N/E grid. N=300 exercises the
+    ragged final Pallas block (grid block 256)."""
+    args = _pair_scorer_inputs(jax.random.PRNGKey(n * 7 + e), n, e)
+    lf, sf = ops.pair_scorer(*args, impl=impl, interpret=True)
+    lr, sr = _pair_ref(*args)
+    assert lf.shape == (n, e) and sf.shape == sr.shape
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sr),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_pair_scorer_dtype_grid(dtype, impl):
+    """Lower-precision observation blocks go through the same f32 kernel
+    accumulation: parity vs the oracle fed the identical rounded inputs."""
+    args = _pair_scorer_inputs(jax.random.PRNGKey(11), 33, 3, dtype=dtype)
+    lf, _ = ops.pair_scorer(*args, impl=impl, interpret=True)
+    lr, _ = _pair_ref(*args)
+    assert lf.dtype == jnp.float32
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lr),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_pair_scorer_masked_inactive_under_churn(impl):
+    """Churn semantics: inactive UEs still get scored rows (the env pins
+    them to full-local via feasibility masks, not by dropping rows), and
+    the active mask enters ONLY through the per-(server, channel)
+    occupancy scalar — so a departure changes every logit through that
+    one reduction and nothing else."""
+    n, e = 24, 3
+    ue_emb, raw, srv_enc, scorer = _pair_scorer_inputs(
+        jax.random.PRNGKey(3), n, e)
+    for frac in (0.0, 0.5, 1.0):     # empty / half / full fleet
+        r = dict(raw, active=(jnp.arange(n) < frac * n).astype(jnp.float32))
+        lf, sf = ops.pair_scorer(ue_emb, r, srv_enc, scorer,
+                                 impl=impl, interpret=True)
+        lr, sr = _pair_ref(ue_emb, r, srv_enc, scorer)
+        np.testing.assert_allclose(np.asarray(lf), np.asarray(lr),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(sf), np.asarray(sr),
+                                   rtol=1e-5, atol=1e-5)
+    # two churn states differing ONLY in the mask: occupancy is the sole
+    # coupling, so equal occupancy => bitwise-equal logits
+    a1 = jnp.zeros((n,)).at[0].set(1.0)
+    a2 = jnp.zeros((n,)).at[n - 1].set(1.0)
+    l1, _ = ops.pair_scorer(ue_emb, dict(raw, active=a1), srv_enc, scorer,
+                            impl=impl, interpret=True)
+    l2, _ = ops.pair_scorer(ue_emb, dict(raw, active=a2), srv_enc, scorer,
+                            impl=impl, interpret=True)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_pair_scorer_unknown_impl_raises():
+    args = _pair_scorer_inputs(jax.random.PRNGKey(0), 4, 2)
+    with pytest.raises(ValueError, match="impl"):
+        ops.pair_scorer(*args, impl="cuda")

@@ -100,6 +100,17 @@ def test_update_clamps_batch_to_population():
     assert np.isfinite(float(metrics["actor_loss"]))
 
 
+def test_horizon_must_divide_evenly_across_envs():
+    """horizon % n_envs != 0 used to silently drop the remainder frames
+    (T = horizon // n_envs scan steps); the config now refuses it with
+    an actionable message instead."""
+    from repro.rl.mahppo import MAHPPOConfig
+    with pytest.raises(ValueError, match="horizon"):
+        MAHPPOConfig(horizon=100, n_envs=8)
+    # exact multiples still construct fine
+    assert MAHPPOConfig(horizon=96, n_envs=8).horizon == 96
+
+
 def test_evaluate_policy_completion_weighted_math():
     """evaluate_policy's completion-weighted t_task/e_task against a
     hand-computed single-UE scenario: an obs-independent actor (all weights
