@@ -85,7 +85,7 @@ def main() -> None:
                   f"acc={r['acc']:.3f}")
 
     if want("overhead"):
-        _section("fig7 overhead tables")
+        _section("fig7 overhead tables + long-task throughput rungs")
         from benchmarks import bench_overhead
         out = bench_overhead.run()
         results["overhead"] = out
@@ -94,6 +94,28 @@ def main() -> None:
                 _emit(f"fig7_{r['backbone']}_b{r['b']}", 0.0,
                       f"t_ms={r['t_local_ms']:.1f};e_mJ={r['e_local_mJ']:.1f};"
                       f"f_kbits={r['f_kbits']:.0f}")
+        # long-task rungs: completion throughput vs the Eq. 7/8 closed
+        # form once t_task exceeds the frame length (the pre-PR-7 restart
+        # bug starved exactly these; the ledger keeps them honest)
+        long_out = bench_overhead.run_long_tasks(smoke=smoke)
+        results["overhead_long_tasks"] = long_out
+        for r in long_out["rows"]:
+            _emit(f"overhead_long_task_x{r['frames_per_task']:.1f}", 0.0,
+                  f"t_task_ms={r['t_task_ms']:.1f};"
+                  f"expected={r['expected_per_frame']:.4f};"
+                  f"realized={r['realized_per_frame']:.4f};"
+                  f"ratio={r['ratio']:.3f}")
+        for p in long_out["parity"]:
+            guard("overhead", p["name"], p["ratio"], p["limit"])
+        os.makedirs("artifacts", exist_ok=True)
+        artifact = {"bench": "overhead", "schema": 1,
+                    "smoke": smoke, "quick": quick,
+                    "fig7_rows": out["rows"],
+                    "long_task_rows": long_out["rows"],
+                    "parity": long_out["parity"]}
+        with open("artifacts/BENCH_overhead.json", "w") as f:
+            json.dump(artifact, f, indent=1, default=float)
+        print("# wrote artifacts/BENCH_overhead.json", flush=True)
 
     if want("convergence"):
         _section("fig8 convergence (MAHPPO vs local vs JALAD)")

@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Regenerate — or ``--check`` — every hex/sha256 golden in the test
+suite from the committed manifest in ``tests/golden_cases.py``.
+
+Default mode recomputes all goldens from the live simulator and rewrites
+``tests/goldens/goldens.json``; the diff of that file IS the recapture
+event, reviewable case-by-case in one commit. ``--check`` recomputes and
+compares instead (init fingerprints with the documented BLAS tolerance,
+everything else exactly), exiting nonzero on any drift — CI runs this so
+a simulator change can never silently coexist with stale goldens.
+
+Usage:
+    PYTHONPATH=src python scripts/capture_goldens.py [--check]
+        [--only SECTION ...]
+
+Sections: trajectories observe_per_ue observe_entities training
+"""
+import argparse
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+sys.path.insert(0, os.path.join(_REPO, "tests"))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check", action="store_true",
+                    help="compare against the committed goldens instead "
+                         "of rewriting them; exit 1 on drift")
+    ap.add_argument("--only", nargs="*", default=None,
+                    metavar="SECTION",
+                    help="restrict to these golden sections")
+    args = ap.parse_args(argv)
+
+    import golden_cases as gc
+
+    got = gc.compute_all(only=args.only)
+    if not args.check:
+        if args.only is not None:
+            # partial capture: splice into the committed file
+            merged = gc.load_goldens() if os.path.exists(gc.GOLDEN_PATH) \
+                else {"schema": 1}
+            merged.update(got)
+            got = merged
+        gc.save_goldens(got)
+        n = sum(len(v) for k, v in got.items() if isinstance(v, dict))
+        print(f"captured {n} goldens -> {gc.GOLDEN_PATH}")
+        return 0
+
+    want = gc.load_goldens()
+    if args.only is not None:
+        want = {k: v for k, v in want.items()
+                if k == "schema" or k in args.only}
+        want["schema"] = got["schema"]
+    drift = gc.diff_goldens(got, want)
+    if drift:
+        print(f"{len(drift)} golden(s) drifted from the simulator:")
+        for line in drift:
+            print(f"  {line}")
+        print("If the simulator change is intentional, recapture with: "
+              "PYTHONPATH=src python scripts/capture_goldens.py")
+        return 1
+    print("all goldens match the live simulator")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

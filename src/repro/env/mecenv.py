@@ -13,9 +13,29 @@ Reward (Eq. 12):
     r_t = -T0 / K_t - beta * E_t / K_t
 
 Frame dynamics are computed *analytically* (no inner loop): with the frame's
-rates fixed (Eq. 5 interference, per the paper), each UE finishes its
-carry-over task, then floor(T_rem / t_task) whole tasks, then starts one
-partial task. Fully vectorized over UEs and vmappable over parallel envs.
+rates fixed (Eq. 5 interference, per the paper), each frame runs three
+phases per UE, with EXACT work carry-over across frame boundaries:
+
+  phase 1  resume the in-flight task where the previous frame left it:
+           burn its remaining local seconds ``l``, then its remaining
+           offload bits ``n`` at this frame's rate. If the frame ends
+           first, the unfinished remainder ``(l1, n1)`` IS the next
+           state's ``(l, n)`` — the task resumes next frame, never
+           restarts (a UE holds at most one in-flight task, and an open
+           carry-over leaves ``t_rem == 0``, so phases 2/3 are inert).
+  phase 2  run floor(t_rem / t_task) whole tasks at the new split b.
+  phase 3  start one partial task at b; its remainder becomes the next
+           state's ``(l, n)`` when no carry-over is open.
+
+Work is conserved across frames (Eq. 7/8): a task needing m > 1 frames
+completes after exactly its closed-form latency, paying exactly its
+closed-form energy, regardless of how many frame boundaries it spans —
+only the per-frame *rates* (interference, routing) may change under it.
+The single non-conservative term is TX_EPS_BITS: a transmit remainder
+below one bit is treated as complete (absorbing float residue from
+``n - (n/r)*r``), and every bit absorbed is reported in
+``info["eps_bits"]`` so conservation ledgers can account for it
+explicitly. Fully vectorized over UEs and vmappable over parallel envs.
 
 UEs may be heterogeneous: the overhead tables l_new/n_new/feasible are
 (N, B_max+2) — one row per UE, built from a core.split.FleetPlan mixing
@@ -125,6 +145,16 @@ OBS_UE_DIM = OBS_UE_OWN + OBS_UE_ACT + OBS_UE_DEVICE + OBS_UE_POOL \
 OBS_ENT_UE = OBS_UE_OWN + OBS_UE_ACT + OBS_UE_DEVICE + OBS_UE_FLEET
 OBS_ENT_SRV = 4             # dist scale, bw scale, slowness, UEs per slot
 OBS_ENT_EDGE = 3            # distance, clean-rate proxy, edge-service time
+
+
+# Transmit-bit epsilon: a remaining-offload count below this many bits is
+# treated as transmission complete. It exists to absorb float32 residue
+# (``n - (n/r) * r`` can leave O(n * eps_f32) ~ 0.1 bits on a 1e6-bit
+# feature map) — NOT to model physics: a real sub-bit payload can't be
+# sent. Each frame reports the bits it absorbed in ``info["eps_bits"]``,
+# so work-conservation ledgers balance exactly instead of silently losing
+# up to TX_EPS_BITS per task completion.
+TX_EPS_BITS = 1.0
 
 
 def per_ue(table: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
@@ -594,18 +624,25 @@ class MECEnv:
         energy = jnp.zeros_like(s.l)
         completed = jnp.zeros_like(s.l)
 
-        # ---- phase 1: carry-over task (old b; n already fixed)
+        # ---- phase 1: carry-over task (old b; n already fixed), resumed
+        # exactly where the previous frame left it
         dt_l = jnp.minimum(s.l, t_rem) * has_work
         t_rem = t_rem - dt_l
         energy += dt_l * prm.p_compute
         l1 = s.l - dt_l
         tx_time = jnp.where(l1 <= 0, jnp.minimum(s.n / r, t_rem), 0.0) * has_work
         n1 = s.n - tx_time * r
-        n1 = jnp.where(n1 < 1.0, 0.0, n1)
+        eps_bits = jnp.maximum(n1, 0.0) * (n1 < TX_EPS_BITS)
+        n1 = jnp.where(n1 < TX_EPS_BITS, 0.0, n1)
         t_rem = t_rem - tx_time
         energy += tx_time * p_tx
         carried = has_work & (s.l + s.n > 0)
         done_carry = carried & (l1 <= 0) & (n1 <= 0)
+        # a carry-over the frame could not finish: its remainder (l1, n1)
+        # survives into the next state below. It left t_rem == 0 (local
+        # work ate the frame, or tx was clipped to the remaining time), so
+        # phases 2/3 are inert for this UE and (l2, n2) end up zero.
+        carry_open = carried & ~done_carry
         completed += done_carry
         k1 = s.k - done_carry
 
@@ -634,13 +671,23 @@ class MECEnv:
         l2 = jnp.where(start, l_new - dt_l2, 0.0)
         tx2 = jnp.where(start & (l2 <= 0), jnp.minimum(n_new / r, t_rem2), 0.0)
         n2 = jnp.where(start, n_new - tx2 * r, 0.0)
-        n2 = jnp.where(n2 < 1.0, 0.0, n2)
+        eps_bits += jnp.maximum(n2, 0.0) * start * (n2 < TX_EPS_BITS)
+        n2 = jnp.where(n2 < TX_EPS_BITS, 0.0, n2)
         energy += tx2 * p_tx
         finished_partial = start & (l2 <= 0) & (n2 <= 0)
         completed += finished_partial
         k3 = k2 - finished_partial
         l2 = jnp.where(finished_partial, 0.0, l2)
         n2 = jnp.where(finished_partial, 0.0, n2)
+
+        # ---- next-state in-flight task: the OPEN carry-over's remainder
+        # takes precedence over the phase-3 partial (a UE holds at most one
+        # in-flight task; the two are mutually exclusive because an open
+        # carry zeroes t_rem). Discarding (l1, n1) here was the pre-fix
+        # restart bug: any task needing more than 2 frames of work lost its
+        # remainder at every frame boundary and could never complete.
+        l_nxt = jnp.where(carry_open, l1, l2)
+        n_nxt = jnp.where(carry_open, n1, n2)
 
         k_t = completed.sum()
         e_t = energy.sum()
@@ -666,8 +713,8 @@ class MECEnv:
             dropped = (k3 * leaves).sum()
             spawned = (k_fresh * joins).sum()
             k3 = jnp.where(leaves, 0.0, jnp.where(joins, k_fresh, k3))
-            l2 = jnp.where(leaves | joins, 0.0, l2)
-            n2 = jnp.where(leaves | joins, 0.0, n2)
+            l_nxt = jnp.where(leaves | joins, 0.0, l_nxt)
+            n_nxt = jnp.where(leaves | joins, 0.0, n_nxt)
             d_next = jnp.where(joins, d_fresh, s.d)
             act_next = (act & ~leaves) | joins
         else:
@@ -687,8 +734,8 @@ class MECEnv:
         fresh = self.reset(key_reset)
         nxt = EnvState(
             k=jnp.where(done, fresh.k, k3),
-            l=jnp.where(done, fresh.l, l2),
-            n=jnp.where(done, fresh.n, n2),
+            l=jnp.where(done, fresh.l, l_nxt),
+            n=jnp.where(done, fresh.n, n_nxt),
             d=jnp.where(done, fresh.d, d_next),
             t=jnp.where(done, 0, s.t + 1),
             key=key_next,
@@ -697,7 +744,7 @@ class MECEnv:
         info = {"completed": k_t, "energy": e_t,
                 "rate_mean": r.mean(), "offloads": offloads.sum(),
                 "n_active": act.sum(), "spawned": spawned,
-                "dropped": dropped}
+                "dropped": dropped, "eps_bits": eps_bits.sum()}
         if self.multi_server:
             info["server_load"] = server_load
         return nxt, reward, done, info

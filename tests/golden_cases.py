@@ -1,0 +1,306 @@
+"""Golden-case manifest shared by the test suite and
+``scripts/capture_goldens.py``.
+
+Every hex/sha256 golden in the repo — trajectory rollouts
+(test_fleet / test_env / test_multi_server), observation feature blocks
+(test_fleet), and training init/iteration captures
+(test_shared_policy / test_entity_policy) — is DEFINED here once: this
+module knows how to build each case's env, drive it, and reduce the
+result to comparable values. The committed values live in
+``tests/goldens/goldens.json``; the capture script regenerates that file
+(or ``--check``s it against the live simulator) from this manifest, so a
+golden recapture is one command and one commit, never a hand-edit of
+hex blobs.
+
+Two comparison regimes:
+
+* EXACT (hex/sha strings): env trajectories, observation blocks,
+  post-iteration agent shas, metrics bytes, PRNG keys. These are pure
+  jnp/XLA elementwise math — deterministic on a given machine and
+  recapturable in-repo via the script when the simulator legitimately
+  changes.
+* TOLERANCE (float fingerprints): freshly-initialized agent parameters.
+  ``jax.random.orthogonal`` lowers to LAPACK QR, whose last-ulp numerics
+  differ across BLAS builds, so raw-byte shas of init params are
+  machine-dependent (the 6 cross-machine test_shared_policy failures of
+  PR 6). Each leaf is reduced to [sum, sum(|x|), sum(x * cos(i))] in
+  float64: a changed init KEY STREAM moves these by O(1) while a
+  different LAPACK moves them by O(n * ulp), so the check pins the key
+  schedule and stays machine-robust.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", False)
+
+GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "goldens", "goldens.json")
+
+# init-fingerprint comparison tolerances (see module docstring): sums over
+# a 256x128 orthogonal leaf differ by ~1e-3 across BLAS builds and by O(1)
+# across key streams, so these bounds separate the two by >2 orders.
+FP_RTOL = 1e-4
+FP_ATOL = 0.05
+
+
+def load_goldens(path=GOLDEN_PATH):
+    with open(path) as f:
+        return json.load(f)
+
+
+def save_goldens(goldens, path=GOLDEN_PATH):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(goldens, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def _hex(arr, dtype=np.float32):
+    return np.asarray(arr, dtype).tobytes().hex()
+
+
+def tree_sha(tree):
+    h = hashlib.sha256()
+    for path, leaf in sorted(
+            jax.tree_util.tree_flatten_with_path(tree)[0],
+            key=lambda kv: jax.tree_util.keystr(kv[0])):
+        h.update(jax.tree_util.keystr(path).encode())
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+def tree_fingerprint(tree):
+    """Per-leaf tolerance-comparable reduction {keystr: [s, sa, sw]}."""
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        x = np.asarray(leaf, np.float64).ravel()
+        w = np.cos(np.arange(x.size, dtype=np.float64))
+        out[jax.tree_util.keystr(path)] = [
+            float(x.sum()), float(np.abs(x).sum()), float((x * w).sum())]
+    return out
+
+
+def fingerprint_close(got, want, rtol=FP_RTOL, atol=FP_ATOL):
+    """True when two fingerprints match leaf-for-leaf within tolerance."""
+    if sorted(got) != sorted(want):
+        return False
+    return all(np.allclose(got[k], want[k], rtol=rtol, atol=atol)
+               for k in got)
+
+
+# ------------------------------------------------------------------ envs
+@functools.lru_cache(maxsize=None)
+def mixed_fleet():
+    """The canonical 3-UE mixed fleet (CNN + padded transformer + IoT CNN)
+    used by the fleet/shared-policy/entity test suites."""
+    from repro.configs import get_config
+    from repro.core import overhead as oh
+    from repro.core.cnn import make_resnet18
+    from repro.core.split import (build_fleet, cnn_split_table,
+                                  transformer_split_table)
+    cnn = cnn_split_table(make_resnet18(101), 224)
+    cnn_iot = cnn_split_table(make_resnet18(101), 224, dev=oh.IOT_SOC)
+    tf_small = transformer_split_table(get_config("qwen3-1.7b"),
+                                       ue_dev=oh.PHONE_NPU, n_points=2)
+    return build_fleet([cnn, tf_small, cnn_iot],
+                       [oh.JETSON_NANO, oh.PHONE_NPU, oh.IOT_SOC])
+
+
+@functools.lru_cache(maxsize=None)
+def cnn_plan():
+    from repro.core.cnn import make_resnet18
+    from repro.core.split import cnn_split_table
+    return cnn_split_table(make_resnet18(101), 224)
+
+
+def build_env(name):
+    """One env per golden case name. Trajectory/observation/training cases
+    share these builders so the manifest has a single source of truth."""
+    from repro.core.fleets import make_edge_pool
+    from repro.env.mecenv import MECEnv, make_env_params
+    if name == "homo":
+        return MECEnv(make_env_params(cnn_plan(), n_ue=3, n_channels=2))
+    if name == "mixed":
+        return MECEnv(make_env_params(mixed_fleet(), n_channels=2))
+    if name == "churn":
+        return MECEnv(make_env_params(cnn_plan(), n_ue=3, n_channels=2,
+                                      churn_rate=0.4, leave_rate=0.2,
+                                      lam_tasks=30.0))
+    if name == "env5":
+        return MECEnv(make_env_params(cnn_plan(), n_ue=5, n_channels=2))
+    if name == "pool2":
+        return MECEnv(make_env_params(mixed_fleet(), n_channels=2,
+                                      pool=make_edge_pool(2)))
+    if name == "pool2_homo4":
+        return MECEnv(make_env_params(cnn_plan(), n_ue=4, n_channels=2,
+                                      pool=make_edge_pool(2)))
+    if name == "pool3":
+        return MECEnv(make_env_params(mixed_fleet(), n_channels=2,
+                                      pool=make_edge_pool(3)))
+    if name == "train_mixed":
+        return MECEnv(make_env_params(mixed_fleet(), n_channels=2))
+    if name == "train_pool":
+        return MECEnv(make_env_params(mixed_fleet(), n_channels=2,
+                                      pool=make_edge_pool(2)))
+    if name == "train_churn":
+        return MECEnv(make_env_params(mixed_fleet(), n_channels=2,
+                                      churn_rate=0.3, leave_rate=0.2))
+    raise KeyError(name)
+
+
+# ----------------------------------------------------------- trajectories
+TRAJECTORY_CASES = ("homo", "mixed", "churn", "env5", "pool2_homo4")
+
+
+def golden_rollout(env, steps=40, seed=3):
+    """The fixed random-action rollout behind every trajectory golden:
+    per-UE feasible split draws, random channel/power, and (multi-server
+    envs only) random route draws — one extra rng consumption per frame,
+    after power, so single-server streams are unchanged by the head."""
+    n_ue = env.params.n_ue
+    s = env.reset(jax.random.PRNGKey(seed))
+    rng = np.random.RandomState(0)
+    feas = np.asarray(env.params.feasible)
+    valid = [np.where(feas[ue])[0] for ue in range(n_ue)]
+    rewards = []
+    for _ in range(steps):
+        acts = {"split": jnp.asarray([rng.choice(v) for v in valid],
+                                     jnp.int32),
+                "channel": jnp.asarray(rng.randint(0, env.n_channels, n_ue),
+                                       jnp.int32),
+                "power": jnp.asarray(rng.uniform(0.05, 0.5, n_ue),
+                                     jnp.float32)}
+        if env.multi_server:
+            acts["route"] = jnp.asarray(
+                rng.randint(0, env.n_servers, n_ue), jnp.int32)
+        s, r, d, _ = env.step(s, acts)
+        rewards.append(np.float32(r))
+    return np.asarray(rewards, np.float32), s
+
+
+def trajectory_golden(name):
+    rewards, s = golden_rollout(build_env(name))
+    return {"rewards": _hex(rewards),
+            "k": _hex(s.k), "l": _hex(s.l), "n": _hex(s.n), "d": _hex(s.d),
+            "key": _hex(s.key, np.uint32),
+            "active": _hex(s.active, np.uint8)}
+
+
+# ----------------------------------------------------------- observations
+OBS_PER_UE_CASES = ("homo", "mixed", "churn_standby", "pool2")
+OBS_ENTITY_CASES = ("homo", "pool2", "pool3")
+
+
+def obs_state(name):
+    """(env, state) for an observation golden; ``churn_standby`` plants a
+    standby UE to pin the zeroed-row semantics."""
+    if name == "churn_standby":
+        env = build_env("churn")
+        s = env.reset(jax.random.PRNGKey(3))
+        return env, s._replace(active=jnp.asarray([True, False, True]))
+    env = build_env(name)
+    return env, env.reset(jax.random.PRNGKey(3))
+
+
+def obs_per_ue_golden(name):
+    env, s = obs_state(name)
+    return _hex(env.observe_per_ue(s))
+
+
+def obs_entities_golden(name):
+    env, s = obs_state(name)
+    obs = env.observe_entities(s)
+    return {block: _hex(obs[block]) for block in ("ue", "server", "edge")}
+
+
+# --------------------------------------------------------------- training
+TRAIN_CASES = (
+    "per_ue.mixed", "per_ue.pool", "per_ue.churn",
+    "shared.mixed", "shared.pool", "shared.churn",
+    "entity.pool", "entity.churn",
+)
+
+
+def train_env(case):
+    return build_env("train_" + case.split(".", 1)[1])
+
+
+def train_capture(case, *, with_init_tree=False):
+    """init fingerprint + one jitted iteration's exact agent sha, metrics
+    bytes, and final key — the per-mode training golden. The config
+    matches the PR-3/4 capture configs exactly."""
+    from repro.optim import adamw_init
+    from repro.rl.mahppo import MAHPPOConfig, init_agent, make_train_fns
+    mode = case.split(".", 1)[0]
+    env = train_env(case)
+    cfg = MAHPPOConfig(iterations=1, horizon=64, n_envs=2, reuse=2,
+                       batch=32, shared_policy=(mode == "shared"),
+                       entity_policy=(mode == "entity"))
+    key = jax.random.PRNGKey(0)
+    agent = init_agent(key, env, shared_policy=cfg.shared_policy,
+                       entity_policy=cfg.entity_policy)
+    init_tree = agent
+    opt = adamw_init(agent)
+    states = jax.vmap(env.reset)(jax.random.split(key, cfg.n_envs))
+    iteration = make_train_fns(env, cfg)
+    agent, opt, key, states, metrics = iteration(agent, opt, key, states)
+    out = {"init_fp": tree_fingerprint(init_tree),
+           "post_sha": tree_sha(agent),
+           "metrics": {k: _hex(v) for k, v in sorted(metrics.items())},
+           "key": _hex(key, np.uint32)}
+    if with_init_tree:
+        return out, init_tree
+    return out
+
+
+# ------------------------------------------------------------ aggregation
+def compute_all(only=None):
+    """Recompute every golden from the live simulator. ``only``: optional
+    iterable of section names to restrict to."""
+    sections = {
+        "trajectories": lambda: {n: trajectory_golden(n)
+                                 for n in TRAJECTORY_CASES},
+        "observe_per_ue": lambda: {n: obs_per_ue_golden(n)
+                                   for n in OBS_PER_UE_CASES},
+        "observe_entities": lambda: {n: obs_entities_golden(n)
+                                     for n in OBS_ENTITY_CASES},
+        "training": lambda: {c: train_capture(c) for c in TRAIN_CASES},
+    }
+    out = {"schema": 1}
+    for name, fn in sections.items():
+        if only is None or name in only:
+            out[name] = fn()
+    return out
+
+
+def diff_goldens(got, want):
+    """Human-readable drift list between a freshly-computed golden tree and
+    the committed one. Training ``init_fp`` entries compare with the BLAS
+    tolerance; everything else compares exactly."""
+    drift = []
+
+    def walk(g, w, path):
+        if isinstance(w, dict) and isinstance(g, dict):
+            for k in sorted(set(g) | set(w)):
+                if k not in g:
+                    drift.append(f"{path}.{k}: missing from recompute")
+                elif k not in w:
+                    drift.append(f"{path}.{k}: not in committed goldens")
+                elif k == "init_fp":
+                    if not fingerprint_close(g[k], w[k]):
+                        drift.append(f"{path}.init_fp: outside tolerance")
+                else:
+                    walk(g[k], w[k], f"{path}.{k}")
+        elif g != w:
+            drift.append(f"{path}: {w!r} -> {g!r}")
+
+    walk(got, want, "goldens")
+    return drift

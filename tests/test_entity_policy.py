@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import golden_cases as gc
 from repro.configs import get_config
 from repro.core import overhead as oh
 from repro.core.cnn import make_resnet18
@@ -80,6 +81,20 @@ def test_entity_policy_trains_on_every_env_kind(mixed_fleet, name):
     assert np.isfinite(float(metrics["reward_mean"]))
     res = evaluate_policy(env, agent, frames=8)
     assert np.isfinite(res["t_task"]) and np.isfinite(res["reward"])
+
+
+@pytest.mark.parametrize("case", ["entity.pool", "entity.churn"])
+def test_entity_policy_path_matches_golden(case):
+    """The entity-set path is pinned against tests/goldens/goldens.json
+    (PR-7 recapture): init key stream via the tolerance fingerprint,
+    the full jitted iteration via exact post sha / metrics / key."""
+    got, _ = gc.train_capture(case, with_init_tree=True)
+    g = gc.load_goldens()["training"][case]
+    assert gc.fingerprint_close(got["init_fp"], g["init_fp"]), \
+        f"{case}: init key stream / param layout drifted"
+    assert got["post_sha"] == g["post_sha"], case
+    assert got["metrics"] == g["metrics"], case
+    assert got["key"] == g["key"], case
 
 
 def test_entity_agent_transfers_across_pool_size(mixed_fleet):

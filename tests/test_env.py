@@ -11,6 +11,7 @@ try:
 except ImportError:
     given = None
 
+import golden_cases as gc
 from repro.core.cnn import make_resnet18
 from repro.core.split import cnn_split_table
 from repro.env.channel import channel_gain, uplink_rates
@@ -21,6 +22,14 @@ from repro.env.mecenv import MECEnv, make_env_params
 def env():
     plan = cnn_split_table(make_resnet18(101), 224)
     return MECEnv(make_env_params(plan, n_ue=5, n_channels=2))
+
+
+def test_trajectory_matches_golden():
+    """40 random-action frames on the 5-UE homogeneous env reproduce the
+    goldens.json capture (PR-7 exact-carry recapture) byte-for-byte:
+    reward stream, final (k, l, n, d), PRNG key, and membership mask."""
+    got = gc.trajectory_golden("env5")
+    assert got == gc.load_goldens()["trajectories"]["env5"]
 
 
 def test_env_params_scalar_fields_are_jnp(env):

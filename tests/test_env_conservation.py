@@ -1,16 +1,45 @@
-"""Task conservation: across an episode, completed tasks exactly exhaust the
-initial queues (no task lost or double-counted), for arbitrary policies."""
+"""Work and task conservation across frame boundaries.
+
+Two ledger families:
+
+* task conservation — across an episode, completed tasks exactly exhaust
+  the initial queues (no task lost or double-counted), for arbitrary
+  policies;
+* work conservation (the PR-7 exact-carry fix) — an in-flight task's
+  remaining work `(l, n)` is monotone non-increasing across frames and
+  never resets while `k` is unchanged, under churn and per-frame
+  split/channel/power/route changes, and a task spanning ≥3 frames
+  completes at exactly its Eq. 7/8 closed-form latency and energy. The
+  only non-conserved quantity is the explicit TX_EPS_BITS transmit floor,
+  reported per-frame in ``info["eps_bits"]`` and bounded here.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+# the hypothesis-driven ledgers skip cleanly where it isn't installed;
+# the closed-form and fixed-seed carry tests below run everywhere
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+    def _skip_deco(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    given = settings = _skip_deco
+
+    class st:                             # placeholder so strategies parse
+        integers = staticmethod(lambda *a, **k: None)
+        booleans = staticmethod(lambda *a, **k: None)
 
 from repro.core.cnn import make_resnet18
+from repro.core.fleets import make_edge_pool
 from repro.core.split import build_fleet, cnn_split_table
-from repro.env.mecenv import MECEnv, make_env_params
+from repro.env.channel import channel_gain, uplink_rates
+from repro.env.mecenv import TX_EPS_BITS, MECEnv, make_env_params
 
 
 @settings(max_examples=8, deadline=None)
@@ -79,3 +108,122 @@ def test_completed_tasks_conserved_hetero_fleet(seed):
     assert bool(done), "episode should terminate under any feasible policy"
     # completed + remaining == spawned, per UE
     np.testing.assert_allclose(per_ue_completed, per_ue_initial, atol=1.0)
+
+
+# --------------------------------------------------------------------------
+# Multi-frame exact carry (PR 7): tasks spanning >2 frames hit the closed
+# form. Pre-fix, the phase-1 remainder was discarded at every frame
+# boundary, so NONE of these scenarios ever terminated.
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t0,split,p_tx", [
+    (0.02, "local", 0.05),      # full-local: t_task ~ 3.16 frames
+    (0.005, 1, 0.3),            # split 1:   t_task ~ 5.66 frames, ~3 tx
+], ids=["local_3frames", "offload_6frames"])
+def test_multi_frame_task_matches_closed_form(t0, split, p_tx):
+    """A lone UE with 3 queued tasks, each needing >3 frames of work,
+    finishes in EXACTLY ceil(3 * t_task / t0) frames with total energy
+    equal to 3 * (Eq. 8 per-task energy) — work is conserved bit-for-bit
+    across every frame boundary it straddles."""
+    plan = cnn_split_table(make_resnet18(101), 224)
+    env = MECEnv(make_env_params(plan, n_ue=1, n_channels=2, t0=t0))
+    s = env.reset(jax.random.PRNGKey(0), eval_mode=True)
+    s = s._replace(k=jnp.asarray([3.0]))
+    b = env.n_actions_b - 1 if split == "local" else split
+    prm = env.params
+    l_b = float(prm.l_new[0, b])
+    n_b = float(prm.n_new[0, b])
+    g = channel_gain(s.d, prm.pathloss)
+    r = float(jnp.maximum(uplink_rates(
+        jnp.asarray([p_tx]), jnp.asarray([0]), g, jnp.asarray([True]),
+        omega=prm.omega, sigma=prm.sigma), 1.0)[0])
+    t_task = l_b + n_b / r
+    e_task = l_b * float(prm.p_compute[0]) + (n_b / r) * p_tx
+    assert t_task > 3 * t0      # the regime the pre-fix env never finished
+
+    acts = {"split": jnp.asarray([b], jnp.int32),
+            "channel": jnp.zeros((1,), jnp.int32),
+            "power": jnp.asarray([p_tx], jnp.float32)}
+    frames, energy, eps, completed, done = 0, 0.0, 0.0, 0.0, False
+    while not done and frames < 200:
+        s, _, done, info = env.step(s, acts)
+        frames += 1
+        energy += float(info["energy"])
+        eps += float(info["eps_bits"])
+        completed += float(info["completed"])
+    assert bool(done), "multi-frame tasks must complete post-fix"
+    assert completed == 3.0
+    assert frames == int(np.ceil(3 * t_task / t0 - 1e-6))
+    # energy is exact up to the eps-floored bits (bounded below)
+    assert energy == pytest.approx(3 * e_task, rel=1e-4)
+    assert 0.0 <= eps <= 3 * TX_EPS_BITS
+
+
+def _carry_env(kind):
+    plan = cnn_split_table(make_resnet18(101), 224)
+    if kind == "churn":
+        # t0=0.01 makes even mid-table tasks span many frames; churn
+        # exercises the leave/join carry-drop path
+        return MECEnv(make_env_params(plan, n_ue=3, n_channels=2, t0=0.01,
+                                      churn_rate=0.3, leave_rate=0.2,
+                                      lam_tasks=20.0))
+    return MECEnv(make_env_params(plan, n_ue=3, n_channels=2, t0=0.01,
+                                  pool=make_edge_pool(2), lam_tasks=20.0))
+
+
+def _check_carry_invariants(kind, seed):
+    """For every UE that stays active with an unchanged queue count, the
+    in-flight remainder (l, n) is monotone non-increasing frame over
+    frame and never resets to a fresh task's work — even while the
+    policy changes split/channel/power (and route) mid-task. The eps
+    ledger stays within its per-frame bound."""
+    env = _carry_env(kind)
+    n = env.params.n_ue
+    s = env.reset(jax.random.PRNGKey(seed))
+    rng = np.random.RandomState(seed % 2**31)
+    for _ in range(120):
+        prev = s
+        acts = {"split": jnp.asarray(rng.randint(0, env.n_actions_b, n),
+                                     jnp.int32),
+                "channel": jnp.asarray(rng.randint(0, env.n_channels, n),
+                                       jnp.int32),
+                "power": jnp.asarray(rng.uniform(0.05, 0.5, n),
+                                     jnp.float32)}
+        if env.multi_server:
+            acts["route"] = jnp.asarray(rng.randint(0, env.n_servers, n),
+                                        jnp.int32)
+        s, _, done, info = env.step(prev, acts)
+        eps = float(info["eps_bits"])
+        assert 0.0 <= eps <= 2 * n * TX_EPS_BITS
+        if bool(done):
+            continue                      # auto-reset: fresh queues/state
+        pl, pn = np.asarray(prev.l), np.asarray(prev.n)
+        pk, pa = np.asarray(prev.k), np.asarray(prev.active)
+        cl, cn = np.asarray(s.l), np.asarray(s.n)
+        ck, ca = np.asarray(s.k), np.asarray(s.active)
+        for ue in range(n):
+            # the invariant applies to UEs holding an in-flight task that
+            # stay active (active both frames => untouched by churn, since
+            # leaves deactivate and joins activate from standby) with k
+            # unchanged: the carry-over did not complete (any completion
+            # strictly decrements k), so its remainder must have shrunk IN
+            # PLACE — monotone non-increasing, never reset to fresh work.
+            if not (pa[ue] and ca[ue] and ck[ue] == pk[ue]
+                    and pk[ue] > 0 and pl[ue] + pn[ue] > 0):
+                continue
+            assert cl[ue] <= pl[ue] + 1e-6, (kind, ue)
+            assert cn[ue] <= pn[ue] + 1e-3, (kind, ue)
+            # never resets: the in-flight task is still in flight
+            assert cl[ue] + cn[ue] > 0.0, (kind, ue)
+
+
+@pytest.mark.parametrize("kind", ["churn", "pool"])
+@pytest.mark.parametrize("seed", [0, 7, 12345])
+def test_inflight_work_monotone_and_never_resets(kind, seed):
+    _check_carry_invariants(kind, seed)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.booleans())
+def test_inflight_work_monotone_hypothesis(seed, pool):
+    _check_carry_invariants("pool" if pool else "churn", seed)

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import golden_cases as gc
 from repro.configs import get_config
 from repro.core import overhead as oh
 from repro.core.cnn import make_resnet18
@@ -136,71 +137,18 @@ def test_mahppo_short_training_on_mixed_fleet(mixed_fleet):
     assert np.isfinite(float(metrics["reward_mean"]))
 
 
-# Golden trajectories captured from the PRE-churn static env (PR 1 HEAD)
-# and, for "churn", from the PRE-actionspace dynamic env (PR 2 HEAD):
-# 40 frames of rewards + the final EnvState under a fixed seed/action
-# stream. Guards that (a) the static env itself, (b) the dynamic env
-# with churn_rate=leave_rate=0.0, and (c) BOTH through a single-server
-# EdgePool are BIT-FOR-BIT the seed behavior — including the PRNG key
-# stream (key hexes below).
-_GOLD = {
-    "homo": {
-        "rewards": "ed7b13beb7b8a4bd81b3eebd05e6a8bd5b8019bd48cb09be9ec33a"
-                   "bdd3e590bd58ebd3bdb580c2bddea8cebdc29f48bd47c183bd5271"
-                   "d2bd28dba6bd52c4c9bd5a1286bd1cbdafbd7fa641bd01fea9bdd8"
-                   "4a4ebd07bdb3bd6087a5bd68e70cbeec2816be4697b3bd3f0570bd"
-                   "a9339cbe525f68bd74a807be7ec88abdd2980dbe28f0c2bd7ce10c"
-                   "be7f91fdbdee0fd1bdda1fd9bd284bfdbd2ad8d8bd5a42f7bd",
-        "k": "000040400000000000000000", "l": "def94e3d0000000000000000",
-        "n": "000044470000000000000000",
-        "d": "54d26642cad9e3416aabea41", "key": "04aeb16524c70b97",
-        "active": "010101",
-    },
-    "mixed": {
-        "rewards": "ecec87be79c742bfd09e39bf9c0d1ebe4babb4bf800261bff286c7"
-                   "bda075d3bd93d91abcf52307bc070817be937336be5c99a9bd4a92"
-                   "8ebe2a44c8be93550fbe0e7725bee8a309be4f9c01be643b17be8e"
-                   "c648be26d344bd861a84be262245bfa438b5bd503c33be5f51a2bd"
-                   "1cfb78bdd43191bec5ceadbebc4beebda4603ebec52030bffb01db"
-                   "bd083a2cbf1a2e2fbf10c529bff7e12fbfc52030bfbc942fbf",
-        "k": "000000000000000000001643", "l": "0000000000000000d07d853d",
-        "n": "00000000000000000000c447",
-        "d": "54d26642cad9e3416aabea41", "key": "04aeb16524c70b97",
-        "active": "010101",
-    },
-    # homogeneous plan with churn_rate=0.4, leave_rate=0.2, lam_tasks=30
-    "churn": {
-        "rewards": "ed7b13beb7b8a4bd96c715bfa64296bd1464a3bd19989fbd9ab80d"
-                   "bed09fa5bdce4dcabdd82d9cbdc4cb92bdfb533cbe6c098ebe24a9"
-                   "c6bd8b7bc0bd81278fbd70b5a2bd5394a8bdd4d67fbd37004cbee8"
-                   "f531bde0e6cebd4459b9bdb5a4ddbd14accfbd1c71dcbd3a5f97bd"
-                   "a777a6be61fa12be362459bdb95511bec402c8bda23609beb07042"
-                   "bef4be3fbf4293cabda0988bbd4efff5bdf319f1bd663e12be",
-        "k": "000000000000000000008041", "l": "000000000000000000000000",
-        "n": "000000000000000030af2746",
-        "d": "0d0253422049a441fe1e9842", "key": "c1ee0d7e351a63cb",
-        "active": "000101",
-    },
-}
-
-
-def _golden_rollout(env, n_ue=3, seed=3, steps=40):
-    s = env.reset(jax.random.PRNGKey(seed))
-    rng = np.random.RandomState(0)
-    feas = np.asarray(env.params.feasible)
-    valid = [np.where(feas[ue])[0] for ue in range(n_ue)]
-    rewards = []
-    for _ in range(steps):
-        b = jnp.asarray([rng.choice(v) for v in valid], jnp.int32)
-        c = jnp.asarray(rng.randint(0, env.n_channels, n_ue), jnp.int32)
-        p = jnp.asarray(rng.uniform(0.05, 0.5, n_ue), jnp.float32)
-        s, r, d, _ = env.step(s, _acts(b, c, p))
-        rewards.append(np.float32(r))
-    return np.asarray(rewards, np.float32), s
+# Golden trajectories — 40 frames of rewards + the final EnvState under
+# the fixed seed/action stream of `golden_cases.golden_rollout` — live in
+# tests/goldens/goldens.json, captured by scripts/capture_goldens.py at
+# the PR-7 exact-carry fix (the one planned recapture). They guard that
+# (a) the static env itself, (b) the dynamic env with
+# churn_rate=leave_rate=0.0, and (c) BOTH through a single-server
+# EdgePool are BIT-FOR-BIT identical — PRNG key stream included.
+_GOLD = gc.load_goldens()["trajectories"]
 
 
 def _golden_check(env, g, name):
-    rewards, s = _golden_rollout(env)
+    rewards, s = gc.golden_rollout(env)
     assert rewards.tobytes().hex() == g["rewards"], name
     for field in ("k", "l", "n", "d"):
         got = np.asarray(getattr(s, field), np.float32).tobytes().hex()
@@ -250,50 +198,15 @@ def test_churn_env_matches_preactionspace_golden(pool):
     _golden_check(env, _GOLD["churn"], "churn")
 
 
-# Golden per-UE feature rows (hex float32 (N, OBS_UE_DIM) matrices) pinned
-# at the PR-4 introduction of `observe_per_ue`: the homogeneous and mixed
-# static fleets, a churned fleet with a planted standby UE (zeroed own
-# features, live aggregates), and the mixed fleet through the 2-server
-# demo pool. Any change to the feature layout, normalization, or the
-# static fleets.py descriptors shows up here.
-_GOLD_FEATS = {
-    "homo": "295c6f3f0000000000000000cfb9133fcfb9133f0000803f3d0ad73e"
-            "2a7b013e0000803f3b069c3d857a7a3e0000803f0000803f0000803f"
-            "000000000000803f295c6f3fa627c53e0000c03f1f856b3f00000000"
-            "0000000011d3913e11d3913e0000803f3d0ad73e2a7b013e0000803f"
-            "3b069c3d857a7a3e0000803f0000803f0000803f000000000000803f"
-            "295c6f3fa627c53e0000c03f3333733f00000000000000004430963e"
-            "4430963e0000803f3d0ad73e2a7b013e0000803f3b069c3d857a7a3e"
-            "0000803f0000803f0000803f000000000000803f295c6f3fa627c53e"
-            "0000c03f",
-    "mixed": "295c6f3f0000000000000000cfb9133fcfb9133f0000803f3d0ad73e"
-             "2a7b013e0000803f3b069c3d857a7a3e0000803f0000803f0000803f"
-             "000000000000803f295c6f3fa627c53e0000c03f1f856b3f00000000"
-             "0000000011d3913e11d3913e0000803f9a99193f56248e40abaa2a3f"
-             "877b0140f5bd863e0000803f0000803f0000803f000000000000803f"
-             "295c6f3fa627c53e0000c03f3333733f00000000000000004430963e"
-             "4430963e0000803f0ad7233ee510e93f0000803f09678c3f857a7a3e"
-             "0000803f0000803f0000803f000000000000803f295c6f3fa627c53e"
-             "0000c03f",
-    "churn": "5555553f0000000000000000cfb9133fcfb9133f0000803f3d0ad73e"
-             "2a7b013e0000803f3b069c3d857a7a3e0000803f0000803f0000803f"
-             "00000000abaa2a3f9a99593ff1d1de3e0000803f0000000000000000"
-             "000000000000000000000000000000003d0ad73e2a7b013e0000803f"
-             "3b069c3d857a7a3e0000803f0000803f0000803f00000000abaa2a3f"
-             "9a99593ff1d1de3e0000803fdedd5d3f00000000000000004430963e"
-             "4430963e0000803f3d0ad73e2a7b013e0000803f3b069c3d857a7a3e"
-             "0000803f0000803f0000803f00000000abaa2a3f9a99593ff1d1de3e"
-             "0000803f",
-    "pool2": "295c6f3f0000000000000000cfb9133fcfb9133f0000803f3d0ad73e"
-             "2a7b013e0000803f3b069c3d857a7a3e0000803f9a99993f0000803f"
-             "b1befe3e0000803f295c6f3fa627c53e0000403f1f856b3f00000000"
-             "0000000011d3913e11d3913e0000803f9a99193f56248e40abaa2a3f"
-             "877b0140f5bd863e0000803f9a99993f0000803fb1befe3e0000803f"
-             "295c6f3fa627c53e0000403f3333733f00000000000000004430963e"
-             "4430963e0000803f0ad7233ee510e93f0000803f09678c3f857a7a3e"
-             "0000803f9a99993f0000803fb1befe3e0000803f295c6f3fa627c53e"
-             "0000403f",
-}
+# Golden per-UE feature rows (hex float32 (N, OBS_UE_DIM) matrices),
+# introduced with `observe_per_ue` in PR 4 and since maintained by
+# scripts/capture_goldens.py: the homogeneous and mixed static fleets, a
+# churned fleet with a planted standby UE (zeroed own features, live
+# aggregates), and the mixed fleet through the 2-server demo pool. Any
+# change to the feature layout, normalization, or the static fleets.py
+# descriptors shows up here. (These are reset-state observations, so the
+# PR-7 carry-fix recapture left them byte-identical to the PR-4 values.)
+_GOLD_FEATS = gc.load_goldens()["observe_per_ue"]
 
 
 def _feat_hex(env, s):
@@ -326,45 +239,17 @@ def test_observe_per_ue_churn_matches_golden():
                                  lam_tasks=30.0))
     s = env.reset(jax.random.PRNGKey(3))
     s = s._replace(active=jnp.asarray([True, False, True]))
-    assert _feat_hex(env, s) == _GOLD_FEATS["churn"]
+    assert _feat_hex(env, s) == _GOLD_FEATS["churn_standby"]
 
 
-# Golden entity-set observations (hex float32 blocks) pinned at the PR-5
-# introduction of `observe_entities`: the homogeneous single-server fleet
+# Golden entity-set observations (hex float32 blocks), introduced with
+# `observe_entities` in PR 5 and since maintained by
+# scripts/capture_goldens.py: the homogeneous single-server fleet
 # (degenerate [[1,1,0]] geometry, zero edge-service column), and the mixed
 # fleet through the 2- and 3-server demo pools. Any change to the entity
 # feature layout, the geometry encoding (slowness, not speed), or the
 # normalization constants shows up here.
-_GOLD_ENTITIES = {
-    "homo.ue": "295c6f3f0000000000000000cfb9133fcfb9133f0000803f3d0ad73e"
-               "2a7b013e0000803f3b069c3d857a7a3e0000803f295c6f3fa627c53e"
-               "0000c03f1f856b3f000000000000000011d3913e11d3913e0000803f"
-               "3d0ad73e2a7b013e0000803f3b069c3d857a7a3e0000803f295c6f3f"
-               "a627c53e0000c03f3333733f00000000000000004430963e4430963e"
-               "0000803f3d0ad73e2a7b013e0000803f3b069c3d857a7a3e0000803f"
-               "295c6f3fa627c53e0000c03f",
-    "homo.server": "0000803f0000803f000000000000c03f",
-    "homo.edge": "cfb9133f963a913f0000000011d3913e1c57b83f000000004430963e"
-                 "edb4b63f00000000",
-    "pool2.ue": "295c6f3f0000000000000000cfb9133fcfb9133f0000803f3d0ad73e"
-                "2a7b013e0000803f3b069c3d857a7a3e0000803f295c6f3fa627c53e"
-                "0000403f1f856b3f000000000000000011d3913e11d3913e0000803f"
-                "9a99193f56248e40abaa2a3f877b0140f5bd863e0000803f295c6f3f"
-                "a627c53e0000403f3333733f00000000000000004430963e4430963e"
-                "0000803f0ad7233ee510e93f0000803f09678c3f857a7a3e0000803f"
-                "295c6f3fa627c53e0000403f",
-    "pool2.server": "0000803f0000803f000000000000403f3333b33f0000803f"
-                    "aaaa2a3f0000403f",
-    "pool2.edge": "cfb9133f963a913f00000000efd04e3fa0337d3fa0013e3b11d3913e"
-                  "1c57b83f000000007d27cc3e8db3a53f74ad89404430963eedb4b63f"
-                  "000000009243d23e6611a43fa0013e3b",
-    "pool3.server": "0000803f0000803f000000000000003f3333b33f0000803f"
-                    "aaaa2a3f0000003f6666e63fcdcc4c3f555585400000003f",
-    "pool3.edge": "cfb9133f963a913f00000000efd04e3f9f337d3fa0013e3b07f4843f"
-                  "ed51343f4571943c11d3913e1c57b83f000000007d27cc3e8cb3a53f"
-                  "74ad8940f53d033fa0d9723f061fd7414430963eedb4b63f00000000"
-                  "9243d23e6611a43fa0013e3b702b073fb13c703f4571943c",
-}
+_GOLD_ENTITIES = gc.load_goldens()["observe_entities"]
 
 
 def test_observe_entities_matches_golden(mixed_fleet):
@@ -385,11 +270,8 @@ def test_observe_entities_matches_golden(mixed_fleet):
         assert obs["server"].shape == (n_srv, OBS_ENT_SRV)
         assert obs["edge"].shape == (3, n_srv, OBS_ENT_EDGE)
         for block in ("ue", "server", "edge"):
-            key = f"{name}.{block}"
-            if key not in _GOLD_ENTITIES:
-                continue
             got = np.asarray(obs[block], np.float32).tobytes().hex()
-            assert got == _GOLD_ENTITIES[key], key
+            assert got == _GOLD_ENTITIES[name][block], (name, block)
     # the single paper server is the degenerate [[1, 1, 0]] geometry and
     # its edge-service column is identically zero (instant edge)
     homo_obs = cases["homo"][0].observe_entities(

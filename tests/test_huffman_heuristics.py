@@ -73,6 +73,37 @@ def test_oracle_beats_greedy_and_local(env3):
     assert len(set(o["b"])) > 1 or len(set(o["c"])) > 1
 
 
+def test_heuristic_expected_overhead_realized_for_long_tasks():
+    """The heuristics' Eq. 7/8 expected-overhead math must agree with the
+    simulator in the LONG-task regime (t_task >> t0): driving the env
+    with greedy's own static actions realizes greedy's predicted per-task
+    latency as completion throughput. Pre-PR-7 the simulator discarded
+    unfinished carry-over work at every frame boundary, so any plan with
+    t_task > 2*t0 completed nothing and this agreement was impossible."""
+    from repro.core.cnn import make_resnet18
+    from repro.core.split import cnn_split_table
+    from repro.env.mecenv import MECEnv, make_env_params
+    from repro.rl.heuristics import greedy_eval
+    plan = cnn_split_table(make_resnet18(101), 224)
+    # t0=5ms: every feasible split needs several frames per task
+    env = MECEnv(make_env_params(plan, n_ue=2, n_channels=2, t0=0.005))
+    g = greedy_eval(env)
+    assert g["t_task"] > 2 * float(env.params.t0)
+    acts = {"split": jnp.asarray(g["b"], jnp.int32),
+            "channel": jnp.asarray([0, 1], jnp.int32),   # greedy's RR
+            "power": jnp.full((2,), float(env.params.p_max))}
+    s = env.reset(jax.random.PRNGKey(0), eval_mode=True)
+    s = s._replace(d=jnp.full((2,), 50.0))               # greedy's d
+    frames, completed = 400, 0.0
+    step = jax.jit(env.step)
+    for _ in range(frames):
+        s, _, done, info = step(s, acts)
+        completed += float(info["completed"])
+        assert not bool(done)           # eval queues outlast the horizon
+    realized_t = 2 * frames * float(env.params.t0) / completed
+    assert realized_t == pytest.approx(g["t_task"], rel=0.05)
+
+
 @pytest.mark.slow
 def test_mahppo_approaches_static_oracle(env3):
     """The RL agent should reach (or beat — it is state-dependent) the

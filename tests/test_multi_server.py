@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import golden_cases as gc
 from repro.core import overhead as oh
 from repro.core.cnn import make_resnet18
 from repro.core.fleets import EdgePool, make_edge_pool, single_server
@@ -41,6 +42,16 @@ def test_env_exposes_route_head():
     env1 = _pool_env(pool=single_server())
     assert not env1.multi_server
     assert env1.action_space.names == ("split", "channel", "power")
+
+
+def test_routed_trajectory_matches_golden():
+    """40 random-action frames — route draws included — on the 4-UE
+    2-server pool env reproduce the goldens.json capture (PR-7
+    exact-carry recapture) byte-for-byte: reward stream, final state,
+    PRNG key, and membership mask. Pins the routed interference, edge
+    processor-sharing, and carry threading through the pool path."""
+    got = gc.trajectory_golden("pool2_homo4")
+    assert got == gc.load_goldens()["trajectories"]["pool2_homo4"]
 
 
 def test_interference_isolated_per_server():
