@@ -7,12 +7,18 @@ defined exactly once instead of drifting per-benchmark.
 callables. Both support ``reduce="min"`` — best-of-k is the noise-robust
 estimator for a deterministic workload on a shared box, without paying a
 second compilation the way repeating the whole call would.
+
+``tail_stats`` (re-exported from ``repro.stream.qos`` — THE definition)
+summarizes a sample array as p50/p95/p99: bench reports and the
+streaming QoS monitor quote the same percentiles from the same code.
 """
 from __future__ import annotations
 
 import time
 
 import jax
+
+from repro.stream.qos import tail_stats  # noqa: F401  (re-export)
 
 
 def iter_us(env, cfg, n_timed=3, reduce="mean"):

@@ -1,0 +1,210 @@
+"""Streaming serve: the frame-trained entity policy as a live
+dispatcher, swept from underload to saturation.
+
+The scenario is the 8-UE mixed fleet over the 2-server demo pool served
+as a CONTINUOUS task stream (``repro.stream``): per-UE Poisson arrivals,
+per-class deadlines, non-preemptive Eq. 7/8 service, lazy drops. A
+frame-trained entity agent (same recipe as ``bench_generalization``'s
+randomized-pool training) is streaming-fine-tuned by DAgger distillation
+of the occupancy-aware dispatch oracle (``rl.streaming``; the tune
+cycles a mid-load and a saturated scenario so the oracle's load-
+dependent spreading is covered), then evaluated as a SAMPLED
+``live_channel`` dispatcher — the deployment mode — against:
+
+* ``oracle``  — :class:`StreamOracleDispatcher`, the distillation
+  teacher: a per-dispatch sweep of every (split, channel, server, power)
+  candidate under live interference + processor-sharing load. Training-
+  free and the strongest baseline, but it pays a full candidate sweep
+  per dispatch where the policy pays one forward pass (the
+  ``dispatch_us`` tail stats quantify that gap).
+* ``nearest`` — all load onto the closest server, best clean-channel
+  split, least-loaded channel (the deployment default the ledger gates
+  against).
+* ``greedy``  — interference-oblivious per-UE argmin over the clean
+  cost table (frame ``heuristics.greedy_eval`` in stream form).
+* ``local``   — everything on-device.
+* ``zero_shot`` — the UNtuned frame policy, argmax, no live channel:
+  the honest transfer gap the fine-tune exists to close.
+
+Ledger gates: at MID load the tuned entity dispatcher must beat
+nearest-server on p99 sojourn, and at SATURATION on deadline-miss rate
+(both ratio <= 1.0 in quick/full). Smoke trains 3+2 iterations — far
+too few for the distillation to win (empirically miss ratios ~4x), so
+CI smoke instead enforces the training-free half of the pipeline
+strictly: the ORACLE must beat nearest on both gates, and the tuned
+dispatcher must still serve a well-formed stream (completions > 0).
+"""
+from __future__ import annotations
+
+import time
+import warnings
+
+import numpy as np
+
+from repro.core.fleets import (make_edge_pool, make_mixed_fleet,
+                               random_pool_ranges)
+from repro.env.mecenv import MECEnv, make_env_params
+from repro.rl.mahppo import MAHPPOConfig, train_mahppo
+from repro.rl.streaming import StreamTuneConfig, finetune_streaming
+from repro.stream.adapter import (EntityDispatcher, GreedyDispatcher,
+                                  LocalDispatcher, NearestServerDispatcher,
+                                  StreamOracleDispatcher)
+from repro.stream.events import StreamParams, StreamSim
+
+try:
+    from benchmarks._timing import tail_stats
+except ImportError:                 # run directly as a script
+    from _timing import tail_stats
+
+N_UE = 8
+N_SERVERS = 2
+MID_RATE = 4.0                      # nearest still healthy (miss ~0.17)
+SAT_RATE = 12.0                     # nearest saturated (miss ~0.38)
+TUNE_RATES = (6.0, 14.0)            # cycled across each iteration's episodes
+# aggregate QoS keys averaged across eval seeds
+_KEYS = ("miss_rate", "drop_rate", "sojourn_p50", "sojourn_p99",
+         "throughput", "energy_task")
+
+
+def make_stream_env(randomized=False) -> MECEnv:
+    pool = make_edge_pool(N_SERVERS)
+    ranges = random_pool_ranges(N_SERVERS) if randomized else None
+    return MECEnv(make_env_params(make_mixed_fleet(n_ue=N_UE), n_channels=2,
+                                  pool=pool, pool_ranges=ranges))
+
+
+def _eval(env, mk_disp, sp, seeds, timed=False):
+    """Run one scenario over ``seeds`` fresh (dispatcher, sim) pairs and
+    average the QoS report; ``timed`` wraps the dispatcher to collect
+    per-decision wall-clock (the policy-latency satellite metric, quoted
+    through the same ``tail_stats`` as the QoS tails)."""
+    reps, spread, lat_us = [], [], []
+    for seed in seeds:
+        disp = mk_disp(seed)
+        if timed:
+            inner = disp
+
+            def disp(core, ue, _inner=inner):
+                t0 = time.perf_counter()
+                a = _inner(core, ue)
+                lat_us.append((time.perf_counter() - t0) * 1e6)
+                return a
+        sim = StreamSim(env, disp, sp, seed=seed)
+        reps.append(sim.run())
+        done = [r for r in sim.monitor.records if not r.dropped]
+        spread.append(sum(1 for r in done if r.server != 0)
+                      / max(len(done), 1))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")     # all-NaN tails at full drop
+        agg = {k: float(np.nanmean([r[k] for r in reps])) for k in _KEYS}
+    agg["completed"] = int(sum(r["completed"] for r in reps))
+    agg["spread"] = float(np.mean(spread))  # completed share off server 0
+    if timed and lat_us:
+        agg["dispatch_us"] = tail_stats(lat_us)
+    return agg
+
+
+def run(quick=True, smoke=False):
+    frame_iters = 3 if smoke else (30 if quick else 100)
+    tune_cfg = StreamTuneConfig(
+        iterations=2 if smoke else (14 if quick else 20))
+    seeds = (7, 8) if smoke else ((7, 8, 9, 10, 11) if quick
+                                  else tuple(range(7, 15)))
+    horizon = 8.0 if smoke else 12.0
+    rates = (MID_RATE, SAT_RATE) if smoke \
+        else (1.5, MID_RATE, 8.0, SAT_RATE)
+
+    # train on randomized pool geometries (the generalist recipe), serve
+    # the static demo pool
+    t0 = time.time()
+    agent, _ = train_mahppo(
+        make_stream_env(randomized=True),
+        MAHPPOConfig(iterations=frame_iters, horizon=512, n_envs=4,
+                     reuse=4, entity_policy=True, randomize_pool=True),
+        seed=0)
+    train_s = time.time() - t0
+
+    env = make_stream_env()
+    t0 = time.time()
+    tuned, tune_hist = finetune_streaming(
+        env, agent,
+        [StreamParams(rate=r, horizon=4.0 if smoke else 8.0)
+         for r in TUNE_RATES],
+        tune_cfg, seed=100)
+    tune_s = time.time() - t0
+
+    dispatchers = {
+        "entity": lambda s: EntityDispatcher(env, tuned, deterministic=False,
+                                             live_channel=True, seed=s),
+        "zero_shot": lambda s: EntityDispatcher(env, agent),
+        "oracle": lambda s: StreamOracleDispatcher(env),
+        "nearest": lambda s: NearestServerDispatcher(env),
+        "greedy": lambda s: GreedyDispatcher(env),
+        "local": lambda s: LocalDispatcher(env),
+    }
+    # the gate pair (entity, nearest) averages every eval seed; the
+    # context rows settle for fewer sims — quote what was cut
+    ctx_seeds = seeds[:1] if smoke else seeds[:2]
+    rows = []
+    by = {}
+    for rate in rates:
+        sp = StreamParams(rate=rate, horizon=horizon)
+        for name, mk in dispatchers.items():
+            full = name in ("entity", "nearest")
+            agg = _eval(env, mk, sp, seeds if full else ctx_seeds,
+                        timed=(name == "entity" and rate == MID_RATE))
+            agg.update(rate=rate, dispatcher=name,
+                       eval_seeds=len(seeds if full else ctx_seeds))
+            rows.append(agg)
+            by[(rate, name)] = agg
+    print(f"# context dispatchers averaged over {len(ctx_seeds)} seed(s) "
+          f"(gate pair over {len(seeds)})")
+
+    def ratio(num_key, rate, a="entity", b="nearest", eps=1e-3):
+        return (by[(rate, a)][num_key] + eps) / (by[(rate, b)][num_key]
+                                                 + eps)
+
+    # the acceptance gates: tuned entity vs nearest — p99 at mid load,
+    # miss rate at saturation. Smoke's 3+2 training iterations cannot win
+    # them, so there the ledger enforces the training-free teacher
+    # (oracle vs nearest, same two gates, strict) plus stream sanity.
+    parity = [{"name": "streaming_oracle_vs_nearest_p99_mid",
+               "ratio": ratio("sojourn_p99", MID_RATE, a="oracle"),
+               "limit": 1.0},
+              {"name": "streaming_oracle_vs_nearest_miss_sat",
+               "ratio": ratio("miss_rate", SAT_RATE, a="oracle"),
+               "limit": 1.0}]
+    if not smoke:
+        parity += [{"name": "streaming_entity_vs_nearest_p99_mid",
+                    "ratio": ratio("sojourn_p99", MID_RATE),
+                    "limit": 1.0},
+                   {"name": "streaming_entity_vs_nearest_miss_sat",
+                    "ratio": ratio("miss_rate", SAT_RATE),
+                    "limit": 1.0}]
+    else:
+        done = sum(by[(r, "entity")]["completed"] for r in rates)
+        parity.append({"name": "streaming_entity_completes_tasks",
+                       "ratio": 0.0 if done > 0 else 2.0, "limit": 1.0})
+
+    return {"rows": rows, "train_s": train_s, "tune_s": tune_s,
+            "tune_history": tune_hist,
+            "mid_rate": MID_RATE, "sat_rate": SAT_RATE,
+            "eval_seeds": len(seeds), "horizon": horizon,
+            "entity_dispatch_us":
+                by[(MID_RATE, "entity")].get("dispatch_us"),
+            "parity": parity}
+
+
+if __name__ == "__main__":
+    out = run()
+    for r in out["rows"]:
+        print(f"rate {r['rate']:5.1f} {r['dispatcher']:>10s}: "
+              f"miss={r['miss_rate']:.3f} p99={r['sojourn_p99']:.3f} "
+              f"thr={r['throughput']:.1f}/s spread={r['spread']:.2f}")
+    lat = out["entity_dispatch_us"]
+    if lat:
+        print(f"entity dispatch latency: p50={lat['p50']:.0f}us "
+              f"p99={lat['p99']:.0f}us")
+    for p in out["parity"]:
+        flag = "OK" if p["ratio"] <= p["limit"] else "FAIL"
+        print(f"{p['name']}: {p['ratio']:.3f} (limit {p['limit']}) {flag}")

@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks._timing import paired_iter_samples, paired_ratio
+from benchmarks._timing import paired_iter_samples, paired_ratio, tail_stats
 from repro.core.cnn import make_resnet18
 from repro.core.fleets import make_edge_pool
 from repro.core.split import cnn_split_table
@@ -163,7 +163,11 @@ def run(quick=True, smoke=False):
         iter_us = 1e6 * float(np.median(ts))
         rows.append({"n_ue": n, "frames": cfg.horizon,
                      "agent_frames": cfg.horizon * n,
-                     "iter_us": iter_us, "per_ue_us": iter_us / n})
+                     "iter_us": iter_us, "per_ue_us": iter_us / n,
+                     # tail of the per-round samples, same percentiles as
+                     # the streaming QoS monitor (shared tail_stats)
+                     **{f"iter_{k}_us": 1e6 * v
+                        for k, v in tail_stats(ts).items()}})
     i_lo, i_hi = ladder.index(N_LO), ladder.index(N_HI)
     # per-UE sublinearity from PAIRED rounds: median over rounds of
     # (t_hi/N_HI) / (t_lo/N_LO)

@@ -9,14 +9,18 @@ above its limit makes the run EXIT NONZERO with a summary line, so CI
 catches hot-path regressions instead of scrolling past them. ``--smoke``
 runs the RL sections at tiny iteration counts (CI-sized) and still emits
 the standardized ``artifacts/BENCH_multi_server.json``,
-``artifacts/BENCH_generalization.json``, ``artifacts/BENCH_entity.json``
-and ``artifacts/BENCH_ue_scaling.json`` artifacts. The ue_scaling ledger
-enforces the giant-fleet story: per-UE jitted iteration cost at N=256 at
-most 0.5x the N=16 per-UE cost, and the fused pair-scorer kernel beating
-its naive reference on call_us at N>=256 while matching it numerically.
-The generalization ledger also enforces the zero-shot WINS:
-shared/greedy at n8/n16, and the entity policy vs nearest-server greedy
-on the inverted alt-pool layout and an unseen E=3 pool.
+``artifacts/BENCH_generalization.json``, ``artifacts/BENCH_entity.json``,
+``artifacts/BENCH_ue_scaling.json`` and ``artifacts/BENCH_streaming.json``
+artifacts. The ue_scaling ledger enforces the giant-fleet story: per-UE
+jitted iteration cost at N=256 at most 0.5x the N=16 per-UE cost, and
+the fused pair-scorer kernel beating its naive reference on call_us at
+N>=256 while matching it numerically. The generalization ledger also
+enforces the zero-shot WINS: shared/greedy at n8/n16, and the entity
+policy vs nearest-server greedy on the inverted alt-pool layout and an
+unseen E=3 pool. The streaming ledger enforces the QoS wins: the
+streaming-fine-tuned entity dispatcher vs nearest-server on p99 sojourn
+at mid load and deadline-miss rate at saturation (quick/full; smoke
+enforces the training-free oracle on the same two gates).
 """
 from __future__ import annotations
 
@@ -336,6 +340,40 @@ def main() -> None:
         with open("artifacts/BENCH_entity.json", "w") as f:
             json.dump(entity_artifact, f, indent=1, default=float)
         print("# wrote artifacts/BENCH_entity.json", flush=True)
+
+    if want("streaming"):
+        _section("streaming serve (continuous-time arrivals, deadline QoS, "
+                 "policy-as-dispatcher)")
+        from benchmarks import bench_streaming
+        out = bench_streaming.run(quick=quick, smoke=smoke)
+        results["streaming"] = out
+        for r in out["rows"]:
+            _emit(f"streaming_rate{r['rate']:g}_{r['dispatcher']}", 0.0,
+                  f"miss={r['miss_rate']:.3f};p99={r['sojourn_p99']:.3f};"
+                  f"thr={r['throughput']:.1f};spread={r['spread']:.2f};"
+                  f"seeds={r['eval_seeds']}")
+        lat = out["entity_dispatch_us"]
+        if lat:
+            _emit("streaming_entity_dispatch_us", lat["p50"],
+                  f"p95={lat['p95']:.0f};p99={lat['p99']:.0f}")
+        _emit("streaming_train_s", out["train_s"] * 1e6,
+              f"tune_s={out['tune_s']:.1f};"
+              f"tune_final_miss={out['tune_history'][-1]['miss_rate']:.3f}")
+        for p in out["parity"]:
+            guard("streaming", p["name"], p["ratio"], p["limit"])
+        os.makedirs("artifacts", exist_ok=True)
+        artifact = {"bench": "streaming", "schema": 1,
+                    "smoke": smoke, "quick": quick,
+                    "rows": out["rows"],
+                    "mid_rate": out["mid_rate"],
+                    "sat_rate": out["sat_rate"],
+                    "entity_dispatch_us": out["entity_dispatch_us"],
+                    "train_s": out["train_s"], "tune_s": out["tune_s"],
+                    "tune_history": out["tune_history"],
+                    "parity": out["parity"]}
+        with open("artifacts/BENCH_streaming.json", "w") as f:
+            json.dump(artifact, f, indent=1, default=float)
+        print("# wrote artifacts/BENCH_streaming.json", flush=True)
 
     if want("archs"):
         _section("fig13 other backbones (+ assigned archs)")

@@ -103,6 +103,33 @@ def module_time_energy(flops: float, bytes_moved: float, dev: DeviceModel):
     return t, t * dev.active_power
 
 
+def task_latency_energy(l_b, n_b, rate, p_compute, p_tx, t_edge=None):
+    """Eq. 7/8 closed-form per-task latency/energy — THE one definition.
+
+    A task run at split b costs
+
+        t = l_b + n_b / rate [+ t_edge]     (Eq. 7, + edge service)
+        e = l_b * p_compute + (n_b / rate) * p_tx          (Eq. 8)
+
+    where ``l_b`` is the UE-side local+compression seconds, ``n_b`` the
+    offloaded bits, ``rate`` the uplink bits/s under the current
+    interference, and ``t_edge`` the (processor-shared) edge service
+    seconds (None or 0 for the paper's instantaneous edge).
+
+    Shared by ``MECEnv.task_overhead``, ``rl.heuristics._joint_overhead``
+    and the continuous-time stream simulator (``repro.stream.events``), so
+    the three callers cannot drift; written with plain operators so it is
+    exact on jnp float32 arrays and numpy float64 scalars alike. The op
+    order (one division, reused) matches the historical env expression
+    bit-for-bit on float32 inputs."""
+    tx = n_b / rate
+    t = l_b + tx
+    if t_edge is not None:
+        t = t + t_edge
+    e = l_b * p_compute + tx * p_tx
+    return t, e
+
+
 # -------------------------------------------------- transformer layer costs
 def layer_costs(cfg: ModelConfig, seq_len: int) -> List[dict]:
     """Per-layer {flops, bytes, param_bytes} for a seq_len-token forward.

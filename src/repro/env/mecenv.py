@@ -763,9 +763,8 @@ class MECEnv:
         n_b = per_ue(prm.n_new, b)
         offl = (n_b > 0) & s.active
         r = self._rates(s.d, c, p_tx, route, offl, phys)
-        t = l_b + n_b / r
+        te_eff = None
         if self.multi_server:
             te_eff, _ = self._edge_seconds(b, route, offl, phys)
-            t = t + te_eff
-        e = l_b * prm.p_compute + (n_b / r) * p_tx
-        return t, e
+        return oh.task_latency_energy(l_b, n_b, r, prm.p_compute, p_tx,
+                                      te_eff)

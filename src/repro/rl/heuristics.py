@@ -22,11 +22,13 @@ import math
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.overhead import task_latency_energy
 from repro.env.mecenv import MECEnv, per_ue
 
 
 def _joint_overhead(env: MECEnv, b, c, p, d, active=None, route=None):
-    """Expected per-task latency/energy for each UE under joint actions.
+    """Expected per-task latency/energy for each UE under joint actions
+    (the shared Eq. 7/8 closed form, `core.overhead.task_latency_energy`).
     `active` (N,) bool: inactive UEs neither transmit nor interfere.
     `route` (N,) int: target server on a multi-server env (default 0)."""
     prm = env.params
@@ -42,11 +44,11 @@ def _joint_overhead(env: MECEnv, b, c, p, d, active=None, route=None):
             jnp.asarray(route, jnp.int32)
     r = env._rates(jnp.asarray(d), jnp.asarray(c), jnp.asarray(p), e_route,
                    offl)
-    t = l_b + n_b / r
+    te_eff = None
     if env.multi_server:
         te_eff, _ = env._edge_seconds(b, e_route, offl)
-        t = t + te_eff
-    e = l_b * prm.p_compute + (n_b / r) * jnp.asarray(p)
+    t, e = task_latency_energy(l_b, n_b, r, prm.p_compute,
+                               jnp.asarray(p), te_eff)
     return np.asarray(t), np.asarray(e)
 
 

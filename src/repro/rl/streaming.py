@@ -1,0 +1,236 @@
+"""Streaming fine-tune: distill the occupancy-aware dispatch oracle.
+
+MAHPPO trains the entity policy on the frame-synchronous MDP with the
+Eq. 12 mean-overhead reward; deployment serves a *stream* judged on
+deadline misses and p99 tails (``stream.qos``). The regimes genuinely
+differ: in the frame MDP every UE transmits every frame, so the trained
+equilibrium is interference-limited (conservative power, mid splits),
+while a stream at serving loads is mostly collision-free — the frame
+policy's zero-shot QoS is honest but poor, and adapting it is the point
+of this module.
+
+Two structural facts shape the method. First, score-function RL over
+stream episodes has congestion-confounded credit: once a queue builds,
+every decision made inside it inherits a terrible outcome whatever the
+action, so whole-episode AND per-task REINFORCE both reduce to noise
+exactly in the regime that needs fixing. Second, the frame observation
+(``observe_entities`` over the bridged ``EnvState``) cannot even
+represent live channel/server occupancy — the frame MDP has no such
+concept — so no gradient signal could make the policy condition on it.
+
+So the fine-tune is DAgger-style distillation instead: roll out the
+SAMPLED entity policy as the live dispatcher, label every visited state
+with the action of :class:`~repro.stream.adapter.StreamOracleDispatcher`
+— the per-dispatch sweep that prices every feasible (split, channel,
+server, power) candidate under the live interference and
+processor-sharing load — and fit the actor to the labels through the
+same ``entity_actor_forward`` + ``HybridActionSpace.log_prob`` path the
+frame trainer differentiates (weighted to the deciding UE; continuous
+labels pulled back through the sigmoid squash). Aggregating datasets
+across iterations is classic DAgger; the supervised signal is immune to
+the credit confounding above. Where the oracle's occupancy-dependent
+choices hit states the observation aliases, the distilled policy learns
+the label *marginals* — and the deployed dispatcher SAMPLES, so that
+distribution becomes randomized load-spreading (the blind analog of
+power-of-two-choices) rather than a deterministic pile-up. The one live
+signal the runtime exposes to EVERY dispatcher — channel occupancy on
+the chosen server, the same ``least_loaded_channel`` peek the
+greedy/nearest baselines take at dispatch time — is applied as a
+dispatch-time override (``live_channel=True``) in both the rollouts
+here and deployment, so the policy owns exactly the heads the
+baselines don't read from the runtime: split, power, and route.
+
+Every iteration is scored by ``stream_reward`` over its rollout
+episodes and the best-scoring actor (the frame-trained zero-shot
+weights included) is returned — only the actor adapts; the frame critic
+has no streaming value target and rides along untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.env.mecenv import MECEnv
+from repro.optim import adamw_init, adamw_update
+from repro.rl import nets
+from repro.stream.adapter import (EntityDispatcher, StreamOracleDispatcher,
+                                  stream_env_state)
+from repro.stream.events import StreamParams, StreamSim
+from repro.stream.qos import StreamRewardConfig, stream_reward
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamTuneConfig:
+    """``epochs`` adamw steps per iteration over the aggregated (all
+    iterations so far) labeled dataset — supervised, so sample reuse is
+    free, unlike a policy gradient's."""
+    iterations: int = 6
+    episodes_per_iter: int = 2
+    epochs: int = 10
+    lr: float = 3e-3
+    reward: StreamRewardConfig = StreamRewardConfig()
+
+
+def _episode_logp(env: MECEnv, params, states, raws, w):
+    """Differentiable weighted sum over T stacked decisions of the
+    deciding UE's joint log-prob of ``raws`` (here: oracle labels).
+    ``w``: (T, N), the deciding UE's one-hot (zero on padding)."""
+    space = env.action_space
+    n_ue = env.params.n_ue
+
+    def one(s, raw, wt):
+        masks = space.broadcast_masks(env.action_masks(s), n_ue)
+        dist = nets.entity_actor_forward(params, space,
+                                         env.observe_entities(s), masks)
+        lp = jax.vmap(space.log_prob)(dist, raw)
+        return (lp * wt).sum()
+
+    return jax.vmap(one)(states, raws, w).sum()
+
+
+def _bucket(n):
+    """Smallest power of two >= n: stream episodes vary in decision
+    count, and padding to buckets keeps the jitted grad fn at O(log T)
+    distinct shapes instead of one retrace per episode."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def _stack_decisions(env: MECEnv, decisions):
+    """(states, labels, weights) pytrees stacked over one episode's
+    (EnvState, label dict, ue) records, padded to a power-of-two length
+    with repeats of the first record under ZERO weight."""
+    t = len(decisions)
+    pad = _bucket(t) - t
+    decisions = decisions + [decisions[0]] * pad
+    states = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[d[0] for d in decisions])
+    labels = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[d[1] for d in decisions])
+    w = np.eye(env.params.n_ue, dtype=np.float32)[
+        [d[2] for d in decisions]]
+    if pad:
+        w[t:] = 0.0
+    return states, labels, jnp.asarray(w)
+
+
+class _DaggerDispatcher:
+    """Acts with the SAMPLED entity policy (the deployment mode — its
+    randomness is what load-spreads on occupancy-aliased states) while
+    labeling every visited state with the oracle's action."""
+
+    def __init__(self, env, agent, oracle, label_raw, seed):
+        self.inner = EntityDispatcher(env, agent, deterministic=False,
+                                      live_channel=True, seed=seed)
+        self.oracle = oracle
+        self.label_raw = label_raw
+        self.data = []               # (EnvState, label raw dict, ue)
+
+    def __call__(self, core, ue):
+        s = stream_env_state(core)
+        self.data.append((s, self.label_raw(self.oracle(core, ue)), ue))
+        return self.inner(core, ue)
+
+
+def finetune_streaming(env: MECEnv, agent, sp=None,
+                       cfg: StreamTuneConfig = None, *, seed=0,
+                       log_cb=None):
+    """Adapt a frame-trained entity ``agent`` to the stream scenario
+    ``sp`` — a single :class:`StreamParams` or a sequence of them, cycled
+    across each iteration's episodes so one fine-tune covers several load
+    points (the oracle's labels are load-dependent: it spreads servers
+    harder at saturation, so training only at mid load undertrains
+    exactly the regime the saturation gate scores). Returns (agent,
+    history); each history row carries the iteration's mean episode
+    reward and QoS aggregates, measured on the rollouts of the actor the
+    row's update starts from."""
+    sps = (sp if isinstance(sp, (list, tuple)) else
+           [sp or StreamParams()])
+    cfg = cfg or StreamTuneConfig()
+    t0 = float(env.params.t0)
+    actor = agent["entity_actor"]
+    opt = adamw_init(actor)
+    oracle = StreamOracleDispatcher(
+        env, tail_weight=cfg.reward.tail_weight,
+        energy_weight=cfg.reward.energy_weight)
+    space = env.action_space
+    n_ue = env.params.n_ue
+
+    def label_raw(lab):
+        """Physical oracle action (deciding UE) -> full-(N,) raw pytree
+        for ``log_prob``: discrete indices pass through, continuous pull
+        back through the sigmoid squash (u = logit(p / high))."""
+        out = {}
+        for h in space.discrete:
+            out[h.name] = jnp.full((n_ue,), int(lab.get(h.name, 0)),
+                                   jnp.int32)
+        for h in space.continuous:
+            frac = float(np.clip(lab[h.name] / h.high, 1e-4, 1 - 1e-4))
+            out[h.name] = jnp.full((n_ue,), np.log(frac / (1.0 - frac)),
+                                   jnp.float32)
+        return out
+
+    grad_fn = jax.jit(jax.grad(
+        lambda p, st, raw, w: -_episode_logp(env, p, st, raw, w)))
+
+    history = []
+    batches = []                     # DAgger: aggregate across iterations
+    best = (-np.inf, actor)
+    ep_seed = seed
+    for it in range(cfg.iterations):
+        rewards, reports = [], []
+        for ep in range(cfg.episodes_per_iter):
+            ep_seed += 1
+            disp = _DaggerDispatcher(env, {**agent, "entity_actor": actor},
+                                     oracle, label_raw, ep_seed)
+            rep = StreamSim(env, disp, sps[ep % len(sps)],
+                            seed=ep_seed).run()
+            reports.append(rep)
+            rewards.append(stream_reward(rep, cfg.reward, t0=t0))
+            if disp.data:
+                batches.append(_stack_decisions(env, disp.data))
+        r_mean = float(np.mean(rewards))
+        if r_mean > best[0]:
+            best = (r_mean, actor)
+        denom = sum(float(b[2].sum()) for b in batches) or 1.0
+        before = actor
+        for _ in range(cfg.epochs if batches else 0):
+            grads = None
+            for st, raw, w in batches:
+                g = grad_fn(actor, st, raw, w / denom)
+                grads = g if grads is None \
+                    else jax.tree.map(jnp.add, grads, g)
+            actor, opt = adamw_update(grads, opt, actor, cfg.lr,
+                                      weight_decay=0.0)
+        row = {"iteration": it, "reward_mean": r_mean,
+               "miss_rate": float(np.mean([r["miss_rate"]
+                                           for r in reports])),
+               "p99": float(np.mean([r["sojourn_p99"] for r in reports])),
+               # how far this iteration's distillation moved the actor —
+               # 0.0 means the update was a no-op (no decisions labeled)
+               "actor_delta": max((float(jnp.abs(a - b).max()) for a, b in
+                                   zip(jax.tree.leaves(actor),
+                                       jax.tree.leaves(before))),
+                                  default=0.0)}
+        history.append(row)
+        if log_cb:
+            log_cb(row)
+
+    # the last update is never scored inside the loop — score it, then
+    # return the best actor seen (zero-shot weights included)
+    rewards = []
+    for ep in range(cfg.episodes_per_iter):
+        ep_seed += 1
+        disp = EntityDispatcher(env, {**agent, "entity_actor": actor},
+                                deterministic=False, live_channel=True,
+                                seed=ep_seed)
+        rep = StreamSim(env, disp, sps[ep % len(sps)], seed=ep_seed).run()
+        rewards.append(stream_reward(rep, cfg.reward, t0=t0))
+    if float(np.mean(rewards)) > best[0]:
+        best = (float(np.mean(rewards)), actor)
+    return {**agent, "entity_actor": best[1]}, history

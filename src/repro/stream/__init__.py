@@ -1,0 +1,27 @@
+"""Event-driven streaming serve runtime (ROADMAP item 3).
+
+The frame-synchronous :mod:`repro.env.mecenv` MDP decides once per UE per
+frame and scores mean overhead; real edge serving is a *stream* —
+asynchronous task arrivals mid-service, per-task deadlines, and p99 tails
+a mean never sees. This package is the continuous-time counterpart, built
+on the SAME physics (``MECEnv._rates`` interference, the Eq. 7/8 closed
+form in ``core.overhead.task_latency_energy``, processor-shared edge
+service):
+
+* :mod:`repro.stream.events` — event-heap simulator: per-UE Poisson (or
+  deterministic) arrivals, per-class deadlines, non-preemptive service
+  with explicit queues, lazy drops on deadline miss.
+* :mod:`repro.stream.qos` — per-task records, throughput / miss-rate /
+  p50-p95-p99 sojourn tail stats, and the deadline+tail reward the
+  streaming fine-tune (``rl.streaming``) optimizes.
+* :mod:`repro.stream.adapter` — renders stream state as an ``EnvState``
+  so the frozen frame-trained entity policy dispatches ZERO-SHOT, plus
+  greedy / nearest-server / full-local stream baselines.
+* :mod:`repro.stream.dispatcher` — deterministic virtual-time asyncio
+  daemon: mock UE and server processes exchange task messages through
+  mailboxes and the policy runs as the live dispatcher
+  (``examples/streaming_serve.py``).
+"""
+from repro.stream.events import StreamParams, StreamSim  # noqa: F401
+from repro.stream.qos import (QoSMonitor, StreamRewardConfig,  # noqa: F401
+                              TaskRecord, stream_reward, tail_stats)

@@ -1,0 +1,239 @@
+"""Stream state -> frame policy bridge, and the baseline dispatchers.
+
+A dispatcher is any callable ``(core, ue) -> {"split", "channel"
+[, "route"], "power"}`` returning PHYSICAL actions (watts, not pre-squash
+u) for the one UE whose task is being started. The star of the show is
+:class:`EntityDispatcher`: it renders the stream's live state as an
+``EnvState`` snapshot (:func:`stream_env_state`), runs the FROZEN
+frame-trained entity policy through the exact ``evaluate_policy`` act
+path (``observe_entities`` -> ``entity_actor_forward`` -> masked
+``mode``/``sample`` -> ``execute``), and takes the deciding UE's slice —
+zero-shot: no streaming gradient ever touched the weights.
+
+The baselines mirror ``rl.heuristics`` / ``rl.baselines`` in stream
+form: full-local, interference-oblivious greedy over the clean-channel
+cost table, and nearest-server (all load onto the closest server — the
+baseline the streaming bench gates the entity policy against on p99 and
+miss rate).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.env.mecenv import EnvState, MECEnv
+from repro.rl import nets
+from repro.rl.heuristics import _clean_cost_table
+
+
+def stream_env_state(core) -> EnvState:
+    """Render the stream's live state as the frame env's ``EnvState``:
+    ``k`` counts each UE's queued + in-flight tasks, ``(l, n)`` is the
+    in-service task's remaining UE-side work under its frozen rate (the
+    frame carry-over analog), distances are the stream's. All UEs are
+    active and the PRNG key is a constant — the policy forward pass never
+    consumes it, so snapshots stay pure functions of stream state."""
+    n = core.env.params.n_ue
+    k = np.empty((n,), np.float32)
+    l = np.empty((n,), np.float32)
+    nb = np.empty((n,), np.float32)
+    for u in range(n):
+        k[u] = len(core.queues[u]) + (core.serving[u] is not None)
+        l[u], nb[u] = core.in_flight_remainder(u)
+    return EnvState(k=jnp.asarray(k), l=jnp.asarray(l), n=jnp.asarray(nb),
+                    d=jnp.asarray(core.d, jnp.float32),
+                    t=jnp.zeros((), jnp.int32), key=jax.random.PRNGKey(0),
+                    active=jnp.ones((n,), bool), geom=None)
+
+
+class EntityDispatcher:
+    """The frozen frame-trained entity policy as a live stream dispatcher.
+
+    ``deterministic=False`` samples instead of argmax-ing — the streaming
+    deployment mode: the frame observation cannot carry live channel or
+    server occupancy, so on occupancy-aliased states the distilled policy
+    (``rl.streaming``) holds a load-spreading *distribution* and sampling
+    realizes it. ``live_channel=True`` additionally overrides the channel
+    head with :func:`least_loaded_channel` on the chosen server — the
+    same live-state peek the greedy/nearest baselines already take at
+    dispatch time (a dispatcher property, not a policy one: the policy
+    still owns split/power/route, which is everything the baselines don't
+    read from the runtime). With ``record=True`` every decision's
+    (EnvState snapshot, raw pre-squash actions, deciding UE) is kept for
+    post-hoc analysis."""
+
+    def __init__(self, env: MECEnv, agent, *, deterministic=True, seed=0,
+                 live_channel=False):
+        if "entity_actor" not in agent:
+            raise ValueError("EntityDispatcher needs an entity agent "
+                             "({'entity_actor': ...}); train with "
+                             "MAHPPOConfig(entity_policy=True)")
+        self.env = env
+        self.agent = agent
+        self.live_channel = live_channel
+        self.b_local = env.n_actions_b - 1
+        self.record = False
+        self.decisions = []          # (EnvState, raw actions dict, ue)
+        self._key = jax.random.PRNGKey(seed)
+        space = env.action_space
+        n_ue = env.params.n_ue
+
+        def act(agent, s, key):
+            masks = space.broadcast_masks(env.action_masks(s), n_ue)
+            dist = nets.entity_actor_forward(agent["entity_actor"], space,
+                                             env.observe_entities(s), masks)
+            if deterministic:
+                raw = jax.vmap(space.mode)(dist, masks)
+            else:
+                raw = jax.vmap(space.sample)(jax.random.split(key, n_ue),
+                                             dist, masks)
+            return raw, space.execute(raw)
+
+        self._act = jax.jit(act)
+
+    def __call__(self, core, ue):
+        s = stream_env_state(core)
+        self._key, k = jax.random.split(self._key)
+        raw, phys = self._act(self.agent, s, k)
+        if self.record:
+            self.decisions.append((s, raw, ue))
+        act = {name: np.asarray(v)[ue].item() for name, v in phys.items()}
+        if self.live_channel and act["split"] < self.b_local:
+            act["channel"] = least_loaded_channel(core, act.get("route", 0))
+        return act
+
+
+def least_loaded_channel(core, server):
+    """The channel of ``server`` with the fewest in-service transmitters
+    right now (first minimum — deterministic)."""
+    counts = [0] * core.env.n_channels
+    for u in range(core.env.params.n_ue):
+        if core.tx[u] and int(core.route[u]) == server:
+            counts[int(core.chan[u])] += 1
+    return int(np.argmin(counts))
+
+
+class LocalDispatcher:
+    """Everything runs on-device: the always-feasible full-local split,
+    no transmission (power pinned at the head's floor)."""
+
+    def __init__(self, env: MECEnv):
+        self.b_local = env.n_actions_b - 1
+        self.p_min = env.action_space.head("power").low
+
+    def __call__(self, core, ue):
+        return {"split": self.b_local, "channel": 0, "route": 0,
+                "power": self.p_min}
+
+
+class GreedyDispatcher:
+    """Stream form of ``heuristics.greedy_eval``: each dispatch picks the
+    UE's own argmin clean-channel (split[, server]) cell at max power —
+    interference-oblivious — plus the least-loaded channel on the chosen
+    server at dispatch time (the one bit of live state a per-UE greedy
+    would realistically use)."""
+
+    def __init__(self, env: MECEnv, d=50.0):
+        self.env = env
+        self.cost = _clean_cost_table(env, d)   # (N, B+2[, E])
+        self.p_max = float(env.params.p_max)
+
+    def _pick(self, ue):
+        if self.env.multi_server:
+            flat = int(np.argmin(self.cost[ue].reshape(-1)))
+            return flat // self.env.n_servers, flat % self.env.n_servers
+        return int(np.argmin(self.cost[ue])), 0
+
+    def __call__(self, core, ue):
+        b, e = self._pick(ue)
+        return {"split": b, "channel": least_loaded_channel(core, e),
+                "route": e, "power": self.p_max}
+
+
+class NearestServerDispatcher(GreedyDispatcher):
+    """Stream form of ``baselines.nearest_server_eval``: every task goes
+    to the CLOSEST server (min distance scale), best clean-channel split
+    there — the whole fleet piles onto one server's channels and its
+    processor-sharing queue, which is exactly the tail-latency failure
+    mode the entity dispatcher is gated against."""
+
+    def __init__(self, env: MECEnv, d=50.0):
+        super().__init__(env, d)
+        sd = np.asarray(env.params.server_dist) if env.multi_server \
+            else np.zeros((1,))
+        self.nearest = int(np.argmin(sd))
+
+    def _pick(self, ue):
+        if not self.env.multi_server:
+            return int(np.argmin(self.cost[ue])), 0
+        return int(np.argmin(self.cost[ue, :, self.nearest])), self.nearest
+
+
+class StreamOracleDispatcher:
+    """Occupancy-AWARE one-step cost minimizer — the distillation teacher
+    of ``rl.streaming.finetune_streaming``, and the strongest
+    non-learned stream baseline.
+
+    Where :class:`GreedyDispatcher` argmins a clean-channel cost table
+    frozen at init, the oracle sweeps, PER DISPATCH, every feasible
+    (split, channel, server) and a small power grid, computing the
+    candidate's ACTUAL uplink rate under the live transmitting set
+    (committing the candidate occupancy exactly as ``core.start`` will)
+    and its Eq. 7/8 service time under the live processor-sharing load.
+    It minimizes the service-time + energy cost the fine-tune credits
+    (``TaskRecord.task_cost`` without the miss outcome), so it
+    automatically avoids busy channels and loaded servers. The price is
+    a full candidate sweep per dispatch — the policy the fine-tune
+    distills it into amortizes that into one forward pass."""
+
+    def __init__(self, env: MECEnv, *, tail_weight=1.0, energy_weight=0.1,
+                 powers=(0.5, 0.75, 0.98)):
+        self.env = env
+        self.t0 = float(env.params.t0)
+        self.tail_weight = tail_weight
+        self.energy_weight = energy_weight
+        self.p_grid = [float(f * env.params.p_max) for f in powers]
+        self.p_min = env.action_space.head("power").low
+        self.feasible = np.asarray(env.params.feasible, bool)
+        self.b_local = env.n_actions_b - 1
+
+    def _cost(self, t_svc, energy):
+        return self.tail_weight * t_svc / self.t0 \
+            + self.energy_weight * energy
+
+    def __call__(self, core, ue):
+        env, phys = self.env, core.phys
+        n_srv = env.n_servers if env.multi_server else 1
+        offl_bs = [b for b in range(env.n_actions_b)
+                   if self.feasible[ue, b] and core.n_new_of(ue, b) > 0]
+        # full-local is always a candidate (no tx, no load, floor power)
+        t_loc, e_loc = phys.service(ue, self.b_local, 1.0, self.p_min)
+        best = (self._cost(t_loc, e_loc),
+                {"split": self.b_local, "channel": 0, "route": 0,
+                 "power": self.p_min})
+        saved = (bool(core.tx[ue]), int(core.chan[ue]),
+                 int(core.route[ue]), float(core.power[ue]))
+        core.tx[ue] = True
+        for e in range(n_srv):
+            core.route[ue] = e
+            load = int(sum(1 for u in range(len(core.serving))
+                           if core.tx[u] and int(core.route[u]) == e))
+            for c in range(env.n_channels):
+                core.chan[ue] = c
+                for p in self.p_grid:
+                    core.power[ue] = p
+                    # the rate is split-independent: one eval covers
+                    # every candidate b on this (channel, server, power)
+                    r = float(phys.rates(core.d, core.chan, core.power,
+                                         core.route, core.tx)[ue])
+                    for b in offl_bs:
+                        t_svc, en = phys.service(ue, b, r, p,
+                                                 server_load=load, route=e)
+                        cost = self._cost(t_svc, en)
+                        if cost < best[0]:
+                            best = (cost, {"split": b, "channel": c,
+                                           "route": e, "power": p})
+        core.tx[ue], core.chan[ue] = saved[0], saved[1]
+        core.route[ue], core.power[ue] = saved[2], saved[3]
+        return best[1]

@@ -1,0 +1,336 @@
+"""Event-heap continuous-time MEC stream simulator — same physics as MECEnv.
+
+Where :class:`repro.env.mecenv.MECEnv` advances one frame at a time with
+every UE deciding synchronously, this simulator advances an EVENT HEAP in
+continuous time: tasks arrive per UE as Poisson (or deterministic)
+processes, each carries a per-class deadline, and a dispatcher is asked
+for a decision ``{split, channel[, route], power}`` the moment a task
+reaches the head of its UE's queue. Service is NON-PREEMPTIVE and its
+duration is the Eq. 7/8 closed form (``core.overhead.task_latency_energy``
+— the same shared helper ``env.task_overhead`` uses), over rates computed
+by the env's own ``_rates`` (interference, per-server path loss and
+channels) and processor-shared edge seconds from the env's ``t_edge``
+table.
+
+Quasi-static freeze: a task's rate, edge load, and therefore its service
+time are FROZEN at service start — later starts/completions do not
+retro-adjust in-flight durations. This is the continuous-time analog of
+the frame env fixing each frame's rates at its start (paper Eq. 5 "rates
+constant within a frame"); an in-service offloading task occupies its
+(server, channel) slot and counts toward its server's processor-sharing
+load for its whole service window, mirroring the frame env's
+"offloads-this-frame" interference semantics.
+
+Deadlines are handled LAZILY: a queued task whose deadline has already
+passed when it reaches the head is dropped (never served); an in-service
+task always runs to completion (non-preemptive) and a late finish counts
+as a deadline MISS but not a drop. The conservation ledger
+
+    arrivals == completed + dropped + queued + in_flight
+
+holds after every event (``ledger()``; property-tested in
+``tests/test_stream.py`` mirroring ``test_churn_properties.py``).
+
+Determinism: the heap is keyed ``(time, seq)`` with a monotone sequence
+breaking ties, and every random draw comes from per-UE
+``numpy.random.default_rng([seed, ue])`` streams — event order and all
+results are a pure function of (env, dispatcher, params, seed), never of
+wall clock. The per-UE streams are what lets the asyncio daemon
+(``dispatcher.py``) reproduce the exact same arrival processes from
+independent UE coroutines.
+
+The state + bookkeeping half lives in :class:`StreamCore` so the heap
+loop here and the virtual-time asyncio daemon drive the SAME start/finish
+logic — the two runtimes cannot drift.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import heapq
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.overhead import task_latency_energy
+from repro.env.mecenv import MECEnv
+from repro.stream.qos import QoSMonitor, TaskRecord
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamParams:
+    """One streaming scenario. ``rate`` is the per-UE mean arrival rate
+    (tasks/s); arrivals stop at ``horizon`` and the sim drains the
+    backlog. ``classes`` is the task-class mix as (weight, relative
+    deadline seconds) pairs — each task draws a class at arrival and its
+    absolute deadline is ``t_arrive + deadline``. ``deterministic``
+    replaces the Poisson gaps with fixed ``1/rate`` spacing (per-UE phase
+    offsets avoid synchronized arrivals). ``d_eval`` pins every UE at a
+    fixed distance like the env's eval mode; ``None`` draws distances
+    uniformly from the env's [d_low, d_high)."""
+    rate: float = 4.0
+    horizon: float = 30.0
+    classes: tuple = ((0.75, 1.0), (0.25, 0.4))
+    deterministic: bool = False
+    d_eval: float = 50.0
+
+
+class StreamPhysics:
+    """The MECEnv physics surface the stream needs, frozen once: numpy
+    views of the split tables and a jitted wrapper around the env's own
+    ``_rates`` so interference (and the per-server path loss / channel
+    layout of an edge pool) is computed by the SAME code as ``env.step``.
+    Static pool geometry only — a resampled-geometry episode is a
+    frame-training construct, not a serve-time one."""
+
+    def __init__(self, env: MECEnv):
+        self.env = env
+        prm = env.params
+        self.l_new = np.asarray(prm.l_new, np.float64)
+        self.n_new = np.asarray(prm.n_new, np.float64)
+        self.p_compute = np.asarray(prm.p_compute, np.float64)
+        self.t_edge = None if prm.t_edge is None \
+            else np.asarray(prm.t_edge, np.float64)
+        if env.multi_server:
+            self._rfn = jax.jit(
+                lambda d, c, p, e, tx: env._rates(d, c, p, e, tx))
+        else:
+            self._rfn = jax.jit(
+                lambda d, c, p, e, tx: env._rates(d, c, p, None, tx))
+
+    def rates(self, d, chan, power, route, tx):
+        """(N,) uplink rates under the CURRENT transmitting set — the
+        env's interference model verbatim."""
+        return np.asarray(self._rfn(
+            jnp.asarray(d, jnp.float32), jnp.asarray(chan, jnp.int32),
+            jnp.asarray(power, jnp.float32), jnp.asarray(route, jnp.int32),
+            jnp.asarray(tx, bool)), np.float64)
+
+    def service(self, ue, b, rate, power, *, server_load=1, route=0):
+        """Frozen-at-start service seconds + UE energy of one task: the
+        Eq. 7/8 closed form, with the processor-shared edge tail
+        ``t_edge[ue, b, route] * max(load, 1)`` exactly as
+        ``env._edge_seconds`` charges it."""
+        te = None
+        if self.t_edge is not None:
+            te = self.t_edge[ue, b, route] * max(server_load, 1)
+        t, e = task_latency_energy(self.l_new[ue, b], self.n_new[ue, b],
+                                   rate, self.p_compute[ue], power, te)
+        return float(t), float(e)
+
+
+class StreamCore:
+    """Queues, occupancy, and frozen-service bookkeeping — everything
+    about the stream EXCEPT who advances time. :class:`StreamSim` drives
+    it from an event heap; the asyncio daemon drives it from a virtual
+    clock. ``now`` is owned by the driver.
+
+    Dispatchers (``adapter.py``) receive this object: ``queues``,
+    ``serving``, ``tx``/``chan``/``route``/``power`` occupancy vectors,
+    ``d``, ``now``, and ``in_flight_remainder`` are their observable
+    state."""
+
+    def __init__(self, env: MECEnv, sp: StreamParams, seed: int = 0):
+        self.env = env
+        self.sp = sp
+        self.phys = StreamPhysics(env)
+        n = env.params.n_ue
+        if sp.d_eval is not None:
+            self.d = np.full((n,), float(sp.d_eval))
+        else:
+            self.d = np.random.default_rng([seed, n]).uniform(
+                float(env.params.d_low), float(env.params.d_high), n)
+        self.now = 0.0
+        self.queues = [collections.deque() for _ in range(n)]
+        self.serving = [None] * n            # in-service TaskRecord per UE
+        self.tx = np.zeros((n,), bool)       # offloading in-service
+        self.chan = np.zeros((n,), np.int32)
+        self.route = np.zeros((n,), np.int32)
+        self.power = np.full((n,), 1e-4)
+        self.monitor = QoSMonitor()
+        self.arrivals = 0
+        self.completed = 0
+        self.dropped = 0
+        # per-UE RNG streams: the heap sim and the asyncio daemon draw the
+        # identical arrival processes from these, whatever order events
+        # interleave globally
+        self.rngs = [np.random.default_rng([seed, ue]) for ue in range(n)]
+        self._tid = itertools.count()
+        self._start_seq = itertools.count()
+        w = np.asarray([c[0] for c in sp.classes], np.float64)
+        self._cls_p = w / w.sum()
+        self._cls_dl = np.asarray([c[1] for c in sp.classes], np.float64)
+
+    # ------------------------------------------------------------ arrivals
+    def first_arrival(self, ue):
+        """Absolute time of ue's first arrival (deterministic mode phases
+        the fleet across one period; Poisson draws an exponential gap)."""
+        if self.sp.deterministic:
+            n = self.env.params.n_ue
+            return (ue + 1) / (n * self.sp.rate)
+        return float(self.rngs[ue].exponential(1.0 / self.sp.rate))
+
+    def next_gap(self, ue):
+        if self.sp.deterministic:
+            return 1.0 / self.sp.rate
+        return float(self.rngs[ue].exponential(1.0 / self.sp.rate))
+
+    def new_task(self, ue):
+        """Draw a task arriving NOW for ue (class, absolute deadline) and
+        admit it to the UE's queue."""
+        cls = int(self.rngs[ue].choice(len(self._cls_p), p=self._cls_p))
+        task = TaskRecord(tid=next(self._tid), ue=ue, cls=cls,
+                          t_arrive=self.now,
+                          deadline=self.now + float(self._cls_dl[cls]))
+        self.arrivals += 1
+        self.queues[ue].append(task)
+        return task
+
+    # ------------------------------------------------------------- service
+    def next_task(self, ue):
+        """Head-of-queue task to serve next, after lazily dropping every
+        queued task whose deadline already passed. None if the UE is busy
+        or its queue is empty."""
+        if self.serving[ue] is not None:
+            return None
+        q = self.queues[ue]
+        while q:
+            task = q.popleft()
+            if self.now >= task.deadline:
+                task.dropped = True
+                task.t_done = self.now
+                self.dropped += 1
+                self.monitor.add(task)
+                continue
+            return task
+        return None
+
+    def start(self, task: TaskRecord, action) -> float:
+        """Commit a dispatch decision: freeze occupancy, rate, edge load
+        and the Eq. 7/8 service terms. Returns the service seconds; the
+        driver schedules the completion. Rates are computed WITH this
+        task's own occupancy committed, so simultaneous offloaders
+        interfere mutually exactly as in ``env.step``."""
+        ue = task.ue
+        b = int(action["split"])
+        c = int(action["channel"])
+        e = int(action.get("route", 0))
+        p = float(action["power"])
+        offl = self.n_new_of(ue, b) > 0
+        self.serving[ue] = task
+        self.chan[ue] = c
+        self.route[ue] = e
+        self.power[ue] = p
+        self.tx[ue] = offl
+        load = 1
+        if self.env.multi_server:
+            load = int(sum(1 for u in range(len(self.serving))
+                           if self.tx[u] and int(self.route[u]) == e))
+        r = float(self.phys.rates(self.d, self.chan, self.power,
+                                  self.route, self.tx)[ue])
+        t_svc, energy = self.phys.service(ue, b, r, p, server_load=load,
+                                          route=e)
+        task.t_start = self.now
+        task.start_seq = next(self._start_seq)
+        task.b, task.channel, task.server, task.power = b, c, e, p
+        task.rate, task.t_service, task.energy = r, t_svc, energy
+        return t_svc
+
+    def finish(self, task: TaskRecord):
+        """Service completion: release occupancy, record the task."""
+        ue = task.ue
+        task.t_done = self.now
+        self.serving[ue] = None
+        self.tx[ue] = False
+        self.completed += 1
+        self.monitor.add(task)
+
+    def n_new_of(self, ue, b):
+        return float(self.phys.n_new[ue, b])
+
+    def in_flight_remainder(self, ue):
+        """(local seconds, offload bits) left of ue's in-service task at
+        ``now`` under its frozen rate — the continuous-time analog of the
+        frame env's carry-over ``(l, n)``. The edge tail is not
+        represented, matching the frame state (which only tracks UE-side
+        work of a boundary task)."""
+        task = self.serving[ue]
+        if task is None:
+            return 0.0, 0.0
+        el = self.now - task.t_start
+        l_b = self.phys.l_new[ue, task.b]
+        n_b = self.phys.n_new[ue, task.b]
+        l_rem = max(l_b - el, 0.0)
+        n_rem = max(n_b - max(el - l_b, 0.0) * task.rate, 0.0)
+        return l_rem, n_rem
+
+    # ------------------------------------------------------------- reports
+    def ledger(self):
+        """Task-conservation counts; ``arrivals == completed + dropped +
+        queued + in_flight`` after every event."""
+        return {"arrivals": self.arrivals, "completed": self.completed,
+                "dropped": self.dropped,
+                "queued": sum(len(q) for q in self.queues),
+                "in_flight": sum(t is not None for t in self.serving)}
+
+    def report(self):
+        rep = self.monitor.report(horizon=self.sp.horizon)
+        rep["arrivals"] = self.arrivals
+        return rep
+
+
+class StreamSim(StreamCore):
+    """The event-heap driver: ``run()`` processes arrival / completion
+    events in ``(time, seq)`` order until the stream has fully drained
+    (arrivals stop at ``sp.horizon``; queued work then completes or is
+    dropped). ``dispatch`` is any callable ``(core, ue) -> action dict``
+    — see ``adapter.py`` for the policy and baseline dispatchers."""
+
+    def __init__(self, env: MECEnv, dispatch, sp: StreamParams = None,
+                 seed: int = 0):
+        super().__init__(env, sp or StreamParams(), seed)
+        self.dispatch = dispatch
+        self._seq = itertools.count()
+        self.heap = []
+        for ue in range(env.params.n_ue):
+            t0 = self.first_arrival(ue)
+            if t0 < self.sp.horizon:
+                self._push(t0, "arrive", ue)
+
+    def _push(self, t, kind, payload):
+        heapq.heappush(self.heap, (t, next(self._seq), kind, payload))
+
+    def _try_start(self, ue):
+        task = self.next_task(ue)
+        if task is None:
+            return
+        t_svc = self.start(task, self.dispatch(self, ue))
+        self._push(self.now + t_svc, "done", task)
+
+    def step(self) -> bool:
+        """Process ONE event; False once the heap is empty (stream fully
+        drained). Exposed so property tests can check the conservation
+        ledger between every pair of events."""
+        if not self.heap:
+            return False
+        t, _, kind, payload = heapq.heappop(self.heap)
+        self.now = t
+        if kind == "arrive":
+            ue = payload
+            self.new_task(ue)
+            nxt = t + self.next_gap(ue)
+            if nxt < self.sp.horizon:
+                self._push(nxt, "arrive", ue)
+            self._try_start(ue)
+        else:                                        # "done"
+            task = payload
+            self.finish(task)
+            self._try_start(task.ue)
+        return True
+
+    def run(self):
+        while self.step():
+            pass
+        return self.report()

@@ -1,0 +1,395 @@
+"""Event-driven streaming runtime properties (repro.stream).
+
+Mirrors tests/test_churn_properties.py's two layers:
+ * seeded tests that always run, and
+ * hypothesis-driven variants over arbitrary (seed, rate, deadline)
+   scenarios when hypothesis is installed.
+
+The core invariants:
+ 1. event-ledger conservation AFTER EVERY EVENT:
+        arrivals == completed + dropped + queued + in_flight
+    and at drain: queued == in_flight == 0.
+ 2. closed-form agreement: a single uncontended task's stream service
+    time/energy equals ``env.task_overhead``'s Eq. 7/8 closed form to
+    1e-6 relative — the frame env, the heuristics, and the stream sim
+    all flow through ``core.overhead.task_latency_energy``.
+ 3. determinism: reports and per-task records are pure functions of the
+    seed (heap sim AND virtual-clock asyncio daemon), and the daemon
+    reproduces the heap simulator exactly.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = None
+
+from repro.core.fleets import make_edge_pool, make_mixed_fleet
+from repro.env.mecenv import EnvState, MECEnv, make_env_params
+from repro.rl.heuristics import _joint_overhead
+from repro.rl.mahppo import init_agent
+from repro.stream.adapter import (EntityDispatcher, GreedyDispatcher,
+                                  LocalDispatcher, NearestServerDispatcher,
+                                  stream_env_state)
+from repro.stream.dispatcher import run_daemon
+from repro.stream.events import StreamCore, StreamParams, StreamSim
+from repro.stream.qos import (StreamRewardConfig, TaskRecord, stream_reward,
+                              tail_stats)
+
+
+def _pool_env(n_ue=6, n_servers=2):
+    return MECEnv(make_env_params(make_mixed_fleet(n_ue=n_ue),
+                                  n_channels=2,
+                                  pool=make_edge_pool(n_servers)))
+
+
+def _single_env(n_ue=4):
+    return MECEnv(make_env_params(make_mixed_fleet(n_ue=n_ue),
+                                  n_channels=2))
+
+
+# ------------------------------------------------------------- tail stats
+def test_tail_stats_values():
+    s = tail_stats(np.arange(1, 101, dtype=float))
+    assert s["p50"] == pytest.approx(50.5)
+    assert s["p95"] == pytest.approx(95.05)
+    assert s["p99"] == pytest.approx(99.01)
+    empty = tail_stats([])
+    assert all(np.isnan(v) for v in empty.values())
+
+
+def test_tail_stats_shared_with_benchmarks():
+    """benchmarks/_timing re-exports THE stream.qos definition."""
+    import sys
+    sys.path.insert(0, ".")
+    try:
+        from benchmarks import _timing
+    finally:
+        sys.path.pop(0)
+    assert _timing.tail_stats is tail_stats
+
+
+# ------------------------------------------- closed-form agreement (Eq. 7/8)
+def _lone_task_agreement(env, b, c, e, p, ue=0):
+    """Start ONE task with no contention in the stream; its frozen service
+    time/energy must equal env.task_overhead's closed form when only that
+    UE offloads."""
+    core = StreamCore(env, StreamParams(), seed=0)
+    task = TaskRecord(tid=0, ue=ue, cls=0, t_arrive=0.0, deadline=1e9)
+    core.arrivals += 1
+    core.queues[ue].append(task)
+    t_svc = core.start(core.next_task(ue),
+                       {"split": b, "channel": c, "route": e, "power": p})
+    n = env.params.n_ue
+    b_local = env.n_actions_b - 1
+    split = np.full((n,), b_local, np.int32)
+    split[ue] = b
+    acts = {"split": jnp.asarray(split),
+            "channel": jnp.full((n,), c, jnp.int32),
+            "power": jnp.full((n,), p, jnp.float32)}
+    if env.multi_server:
+        acts["route"] = jnp.full((n,), e, jnp.int32)
+    s = EnvState(k=jnp.ones((n,)), l=jnp.zeros((n,)), n=jnp.zeros((n,)),
+                 d=jnp.asarray(core.d, jnp.float32),
+                 t=jnp.zeros((), jnp.int32), key=jax.random.PRNGKey(0),
+                 active=jnp.ones((n,), bool))
+    t_env, e_env = env.task_overhead(s, acts)
+    assert t_svc == pytest.approx(float(t_env[ue]), rel=1e-6)
+    assert task.energy == pytest.approx(float(e_env[ue]), rel=1e-6)
+    return s, acts
+
+
+def test_closed_form_agreement_multi_server():
+    env = _pool_env()
+    for b, c, e in [(0, 0, 0), (2, 1, 1), (1, 0, 1)]:
+        _lone_task_agreement(env, b, c, e, float(env.params.p_max))
+
+
+def test_closed_form_agreement_single_server():
+    env = _single_env()
+    _lone_task_agreement(env, 1, 1, 0, float(env.params.p_max))
+
+
+def test_three_callers_cannot_drift():
+    """env.task_overhead and heuristics._joint_overhead share the helper:
+    identical inputs -> identical Eq. 7/8 outputs (the stream sim is tied
+    to the same helper by the lone-task tests above)."""
+    env = _pool_env()
+    n = env.params.n_ue
+    rng = np.random.RandomState(3)
+    b = rng.randint(0, env.n_actions_b, n)
+    c = rng.randint(0, env.n_channels, n)
+    e = rng.randint(0, env.n_servers, n)
+    p = np.full((n,), float(env.params.p_max))
+    d = np.full((n,), 50.0)
+    s = EnvState(k=jnp.ones((n,)), l=jnp.zeros((n,)), n=jnp.zeros((n,)),
+                 d=jnp.asarray(d, jnp.float32), t=jnp.zeros((), jnp.int32),
+                 key=jax.random.PRNGKey(0), active=jnp.ones((n,), bool))
+    acts = {"split": jnp.asarray(b, jnp.int32),
+            "channel": jnp.asarray(c, jnp.int32),
+            "route": jnp.asarray(e, jnp.int32),
+            "power": jnp.asarray(p, jnp.float32)}
+    t_env, e_env = env.task_overhead(s, acts)
+    t_h, e_h = _joint_overhead(env, b, c, p, d, route=e)
+    np.testing.assert_allclose(np.asarray(t_env), t_h, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(e_env), e_h, rtol=1e-6)
+
+
+# ---------------------------------------------------- ledger conservation
+def _ledger_run(env, dispatch, sp, seed, check_every=True):
+    sim = StreamSim(env, dispatch, sp, seed=seed)
+    while True:
+        led = sim.ledger()
+        assert led["arrivals"] == led["completed"] + led["dropped"] \
+            + led["queued"] + led["in_flight"], led
+        if not sim.step():
+            break
+    led = sim.ledger()
+    assert led["queued"] == 0 and led["in_flight"] == 0
+    assert led["arrivals"] == led["completed"] + led["dropped"]
+    rep = sim.report()
+    assert rep["tasks"] == led["arrivals"]
+    assert 0.0 <= rep["miss_rate"] <= 1.0
+    return sim
+
+
+def test_stream_ledger_seeded():
+    env = _pool_env()
+    for seed in (0, 7, 123):
+        _ledger_run(env, GreedyDispatcher(env),
+                    StreamParams(rate=6.0, horizon=3.0), seed)
+
+
+def test_stream_ledger_single_server():
+    env = _single_env()
+    _ledger_run(env, GreedyDispatcher(env),
+                StreamParams(rate=5.0, horizon=3.0), seed=1)
+
+
+def test_saturation_drops_and_misses():
+    """Tight deadlines at heavy load: tasks ARE dropped, drops have
+    well-formed records, and every record is terminal exactly once."""
+    env = _pool_env()
+    sp = StreamParams(rate=20.0, horizon=3.0,
+                      classes=((1.0, 0.05),))
+    sim = _ledger_run(env, LocalDispatcher(env), sp, seed=0)
+    rep = sim.report()
+    assert rep["dropped"] > 0
+    assert rep["miss_rate"] > 0.5
+    tids = [r.tid for r in sim.monitor.records]
+    assert len(tids) == len(set(tids)) == sim.arrivals
+    for r in sim.monitor.records:
+        assert r.dropped == (r.b == -1)      # dropped tasks never served
+        assert r.t_done >= r.t_arrive
+
+
+# ------------------------------------------------------------ determinism
+def test_stream_determinism():
+    env = _pool_env()
+    sp = StreamParams(rate=6.0, horizon=3.0)
+
+    def records(seed):
+        sim = StreamSim(env, GreedyDispatcher(env), sp, seed=seed)
+        sim.run()
+        return sorted((r.tid, r.ue, r.t_arrive, r.t_done, r.dropped)
+                      for r in sim.monitor.records)
+
+    assert records(3) == records(3)
+    assert records(3) != records(4)
+
+
+def test_deterministic_arrivals_mode():
+    env = _pool_env(n_ue=4)
+    sp = StreamParams(rate=5.0, horizon=2.0, deterministic=True)
+    sim = _ledger_run(env, GreedyDispatcher(env), sp, seed=0)
+    gaps = sorted(r.t_arrive for r in sim.monitor.records if r.ue == 0)
+    diffs = np.diff(gaps)
+    assert np.allclose(diffs, 1.0 / sp.rate)
+
+
+# --------------------------------------------------------- state adapter
+def test_snapshot_counts_queue_and_in_flight():
+    env = _pool_env()
+    sp = StreamParams(rate=10.0, horizon=2.0)
+    sim = StreamSim(env, GreedyDispatcher(env), sp, seed=2)
+    checked = 0
+    while sim.step():
+        s = stream_env_state(sim)
+        k = np.asarray(s.k)
+        for u in range(env.params.n_ue):
+            expect = len(sim.queues[u]) + (sim.serving[u] is not None)
+            assert k[u] == expect
+        assert np.all(np.asarray(s.l) >= 0)
+        assert np.all(np.asarray(s.n) >= 0)
+        # a UE with no in-service task has no in-flight remainder
+        idle = np.asarray([sim.serving[u] is None
+                           for u in range(env.params.n_ue)])
+        assert np.all(np.asarray(s.l)[idle] == 0)
+        assert np.all(np.asarray(s.n)[idle] == 0)
+        checked += 1
+        if checked >= 40:
+            break
+
+
+def test_entity_dispatcher_zero_shot():
+    """An (untrained) entity agent dispatches a stream end to end: masked
+    feasible splits only, ledger balanced, report well-formed."""
+    env = _pool_env(n_ue=4)
+    agent = init_agent(jax.random.PRNGKey(0), env, entity_policy=True)
+    sim = _ledger_run(env, EntityDispatcher(env, agent),
+                      StreamParams(rate=4.0, horizon=2.0), seed=0)
+    feas = np.asarray(env.params.feasible)
+    for r in sim.monitor.records:
+        if not r.dropped:
+            assert feas[r.ue, r.b], (r.ue, r.b)
+            assert 0 <= r.server < env.n_servers
+            lo = env.action_space.head("power").low
+            hi = env.action_space.head("power").high
+            assert lo <= r.power <= hi
+
+
+def test_entity_dispatcher_live_channel():
+    """The deployment mode (sampled + least-loaded channel override)
+    still emits in-range channels and keeps the ledger balanced."""
+    env = _pool_env(n_ue=4)
+    agent = init_agent(jax.random.PRNGKey(0), env, entity_policy=True)
+    sim = _ledger_run(env, EntityDispatcher(env, agent, deterministic=False,
+                                            live_channel=True, seed=3),
+                      StreamParams(rate=4.0, horizon=2.0), seed=0)
+    served = [r for r in sim.monitor.records if not r.dropped]
+    assert served
+    for r in served:
+        assert 0 <= r.channel < env.n_channels
+
+
+def test_entity_dispatcher_requires_entity_agent():
+    env = _pool_env(n_ue=4)
+    shared = init_agent(jax.random.PRNGKey(0), env, shared_policy=True)
+    with pytest.raises(ValueError):
+        EntityDispatcher(env, shared)
+
+
+def test_oracle_dispatcher():
+    """The occupancy-aware oracle serves a balanced ledger, emits only
+    feasible actions, and its candidate sweep leaves the core's live
+    occupancy state exactly as it found it (it commits candidates
+    in-place to price them under ``core.start`` semantics)."""
+    from repro.stream.adapter import StreamOracleDispatcher
+    env = _pool_env(n_ue=4)
+    oracle = StreamOracleDispatcher(env)
+    inner = StreamOracleDispatcher(env)
+    snaps = []
+
+    def spy(core, ue):
+        before = (core.tx.copy(), core.chan.copy(), core.route.copy(),
+                  core.power.copy())
+        act = inner(core, ue)
+        after = (core.tx, core.chan, core.route, core.power)
+        snaps.append(all(np.array_equal(b, np.asarray(a))
+                         for b, a in zip(before, after)))
+        return act
+
+    sim = _ledger_run(env, spy, StreamParams(rate=6.0, horizon=2.0), seed=1)
+    assert snaps and all(snaps)
+    feas = np.asarray(env.params.feasible)
+    lo = env.action_space.head("power").low
+    for r in sim.monitor.records:
+        if not r.dropped:
+            assert feas[r.ue, r.b]
+            assert 0 <= r.server < env.n_servers
+            assert lo <= r.power <= float(env.params.p_max)
+    assert oracle.p_grid[-1] <= float(env.params.p_max)
+
+
+# --------------------------------------------------------- asyncio daemon
+def test_daemon_matches_heap_sim():
+    """The virtual-clock asyncio daemon drives the same StreamCore as the
+    event heap: identical per-task records for both a state-independent
+    (local) and an interference-coupled (greedy) dispatcher."""
+    env = _pool_env()
+    sp = StreamParams(rate=4.0, horizon=2.5)
+    for mk in (LocalDispatcher, GreedyDispatcher):
+        sim = StreamSim(env, mk(env), sp, seed=3)
+        rep_sim = sim.run()
+        rep_d, core = run_daemon(env, mk(env), sp, seed=3)
+        key = lambda recs: sorted((r.tid, r.ue, r.t_arrive, r.t_start,
+                                   r.t_done, r.dropped, r.b, r.server)
+                                  for r in recs)
+        assert key(sim.monitor.records) == key(core.monitor.records)
+        assert rep_sim == rep_d
+
+
+def test_daemon_deterministic():
+    env = _pool_env(n_ue=4)
+    sp = StreamParams(rate=6.0, horizon=2.0)
+    r1, c1 = run_daemon(env, NearestServerDispatcher(env), sp, seed=5)
+    r2, c2 = run_daemon(env, NearestServerDispatcher(env), sp, seed=5)
+    assert r1 == r2
+    assert [(t.tid, t.t_done) for t in c1.monitor.records] \
+        == [(t.tid, t.t_done) for t in c2.monitor.records]
+    r3, _ = run_daemon(env, NearestServerDispatcher(env), sp, seed=6)
+    assert r1 != r3
+
+
+# ------------------------------------------------------- streaming reward
+def test_stream_reward_orders_outcomes():
+    good = {"miss_rate": 0.0, "sojourn_p99": 0.1, "energy_task": 0.05}
+    bad = {"miss_rate": 0.5, "sojourn_p99": 2.0, "energy_task": 0.05}
+    cfg = StreamRewardConfig()
+    assert stream_reward(good, cfg) > stream_reward(bad, cfg)
+    # fully dropped stream (NaN tails) still scores finitely
+    allnan = {"miss_rate": 1.0, "sojourn_p99": float("nan"),
+              "energy_task": float("nan")}
+    assert np.isfinite(stream_reward(allnan, cfg))
+
+
+@pytest.mark.slow
+def test_finetune_streaming_smoke():
+    from repro.rl.streaming import StreamTuneConfig, finetune_streaming
+    env = _pool_env(n_ue=4)
+    agent = init_agent(jax.random.PRNGKey(0), env, entity_policy=True)
+    sp = StreamParams(rate=3.0, horizon=1.5)
+    tuned, hist = finetune_streaming(
+        env, agent, sp, StreamTuneConfig(iterations=2, episodes_per_iter=2),
+        seed=0)
+    assert len(hist) == 2
+    assert all(np.isfinite(h["reward_mean"]) for h in hist)
+    # every iteration's distillation update must move the in-loop actor
+    # (the RETURNED actor is the best-scoring candidate and may
+    # legitimately be the zero-shot weights at smoke scale)
+    assert all(h["actor_delta"] > 0 for h in hist)
+    l2 = jax.tree.leaves(tuned["entity_actor"])
+    assert not any(np.isnan(np.asarray(x)).any() for x in l2)
+    # critic rides along untouched
+    same = jax.tree.map(lambda a, b: bool((np.asarray(a)
+                                           == np.asarray(b)).all()),
+                        agent["critic"], tuned["critic"])
+    assert all(jax.tree.leaves(same))
+
+
+# ------------------------------------------------- hypothesis properties
+if given is not None:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.floats(0.5, 15.0),
+           st.floats(0.05, 1.5), st.booleans())
+    def test_stream_ledger_property(seed, rate, deadline, deterministic):
+        """Ledger conservation for ARBITRARY load, deadline tightness and
+        arrival process (every arrival ends exactly one of completed /
+        dropped / queued / in-flight, drained to zero)."""
+        env = _ledger_property_env()
+        sp = StreamParams(rate=rate, horizon=2.0,
+                          classes=((0.5, deadline), (0.5, 2 * deadline)),
+                          deterministic=deterministic)
+        _ledger_run(env, GreedyDispatcher(env), sp, seed)
+
+    _LEDGER_ENV = []
+
+    def _ledger_property_env():
+        if not _LEDGER_ENV:
+            _LEDGER_ENV.append(_pool_env(n_ue=4))
+        return _LEDGER_ENV[0]
