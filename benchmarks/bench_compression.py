@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cnn as cnn_lib
-from repro.core.compressor import (accuracy_with_ae, compression_rate,
+from repro.core.compressor import (accuracy_with_ae, measure_rate_distortion,
                                    train_autoencoder)
 from repro.core.jalad import jalad_compress_size_bits
 from repro.data.synthetic import synthetic_image_batch
@@ -65,55 +65,54 @@ def _accuracy(model, params, n_batches=4):
     return float(np.mean(accs))
 
 
-def run(quick=True):
+def run(quick=True, smoke=False):
     model = cnn_lib.make_resnet18(NCLS, width=WIDTH)
     t0 = time.time()
-    bb = _pretrain_backbone(model, steps=150 if quick else 400)
+    bb = _pretrain_backbone(model,
+                            steps=40 if smoke else (150 if quick else 400))
     base_acc = _accuracy(model, bb)
+    # the paper's 2%-rule sweep lives in core.compressor so measured
+    # SplitPlans (core.split.measured_cnn_split_table) can reuse it
+    rd = measure_rate_distortion(
+        model, bb,
+        data_iter_fn=lambda pi: _data_iter(seed0=500 + pi),
+        eval_batch_fn=lambda pi: synthetic_image_batch(
+            jax.random.PRNGKey(20_000 + pi), 64, IMG, NCLS),
+        ratios=(8,) if smoke else ((4, 8, 16) if quick
+                                   else (2, 4, 8, 16, 32)),
+        steps=8 if smoke else (30 if quick else 150), lr=3e-3,
+        base_acc=base_acc)
     rows = []
-    shapes = model.feature_shapes(IMG)
-    ae_steps = 30 if quick else 150
-    ratios = (4, 8, 16) if quick else (2, 4, 8, 16, 32)
-    for pi, k in enumerate(model.split_after):
-        ch = shapes[k][0]
-        best_rate, best_acc = 4.0, base_acc  # quant-only fallback R=32/8
-        for rc in ratios:
-            chp = max(1, ch // rc)
-            ae, _, _ = train_autoencoder(
-                jax.random.PRNGKey(pi * 10 + rc), model, bb, k,
-                _data_iter(seed0=500 + pi), ch=ch, ch_prime=chp,
-                steps=ae_steps, lr=3e-3)
-            x, y = synthetic_image_batch(jax.random.PRNGKey(20_000 + pi), 64,
-                                         IMG, NCLS)
-            acc = float(accuracy_with_ae(model, bb, ae, k, x, y, bits=8))
-            rate = compression_rate(ch, chp, 8)
-            if acc >= base_acc - 0.02 and rate > best_rate:
-                best_rate, best_acc = rate, acc
+    for pi, (k, r) in enumerate(zip(model.split_after, rd)):
         # JALAD entropy rate on the same feature
         x, _ = synthetic_image_batch(jax.random.PRNGKey(30_000 + pi), 16, IMG,
                                      NCLS)
         feat = cnn_lib.forward(model, bb, x, upto=k + 1)
         _, jrate = jalad_compress_size_bits(feat, 8)
-        rows.append({"point": pi + 1, "channels": ch,
-                     "ae_rate": float(best_rate), "ae_acc": best_acc,
+        rows.append({"point": pi + 1, "channels": r["channels"],
+                     "ch_prime": r["ch_prime"],
+                     "ae_rate": float(r["rate"]), "ae_acc": r["acc"],
                      "jalad_rate": float(jrate), "base_acc": base_acc})
     return {"rows": rows, "seconds": time.time() - t0}
 
 
-def run_xi_ablation(quick=True):
+def run_xi_ablation(quick=True, smoke=False):
     """Fig. 5: xi in {0, 0.01, 0.1, 1.0} at each split point."""
     model = cnn_lib.make_resnet18(NCLS, width=WIDTH)
-    bb = _pretrain_backbone(model, steps=150 if quick else 400)
+    bb = _pretrain_backbone(model,
+                            steps=40 if smoke else (150 if quick else 400))
     shapes = model.feature_shapes(IMG)
+    xis = (0.0, 0.1) if smoke else (0.0, 0.01, 0.1, 1.0)
     rows = []
-    for pi, k in enumerate(model.split_after[:2] if quick
-                           else model.split_after):
+    for pi, k in enumerate(model.split_after[:1] if smoke
+                           else (model.split_after[:2] if quick
+                                 else model.split_after)):
         ch = shapes[k][0]
-        for xi in (0.0, 0.01, 0.1, 1.0):
+        for xi in xis:
             ae, _, _ = train_autoencoder(
                 jax.random.PRNGKey(42), model, bb, k,
                 _data_iter(seed0=900), ch=ch, ch_prime=max(1, ch // 8),
-                steps=25 if quick else 100, lr=3e-3, xi=xi)
+                steps=8 if smoke else (25 if quick else 100), lr=3e-3, xi=xi)
             x, y = synthetic_image_batch(jax.random.PRNGKey(40_000), 64, IMG,
                                          NCLS)
             acc = float(accuracy_with_ae(model, bb, ae, k, x, y, bits=8))

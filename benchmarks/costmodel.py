@@ -49,6 +49,18 @@ def model_flops(cfg: ModelConfig, shape_name: str):
     return 2.0 * body * tokens + 2.0 * tokens * cfg.d_model * cfg.vocab_size
 
 
+def llm_serve_flops(cfg: ModelConfig, ctx_len: int, gen_tokens: int = 1):
+    """MODEL_FLOPS-convention total for serving ONE request: 2*N_active
+    per context token (prefill) + per generated token, + the lm head per
+    generated token. Attention terms are excluded by convention — the
+    cross-check against core.overhead's per-layer tables (which include
+    them) in bench_llm_offload is expected to agree to O(1), not exactly."""
+    _, active = param_counts(cfg)
+    body = active - embed_params(cfg)
+    head = 2.0 * cfg.d_model * cfg.vocab_size
+    return 2.0 * body * ctx_len + gen_tokens * (2.0 * body + head)
+
+
 def memory_bytes_per_device(rec: dict, shape_name: str):
     """Roofline memory traffic per device per step, from dry-run sizes:
     decode: params + cache read once; train: params read(fwd+bwd) + grads

@@ -10,8 +10,9 @@ catches hot-path regressions instead of scrolling past them. ``--smoke``
 runs the RL sections at tiny iteration counts (CI-sized) and still emits
 the standardized ``artifacts/BENCH_multi_server.json``,
 ``artifacts/BENCH_generalization.json``, ``artifacts/BENCH_entity.json``,
-``artifacts/BENCH_ue_scaling.json`` and ``artifacts/BENCH_streaming.json``
-artifacts. The ue_scaling ledger enforces the giant-fleet story: per-UE
+``artifacts/BENCH_ue_scaling.json``, ``artifacts/BENCH_streaming.json``,
+``artifacts/BENCH_compression.json`` and
+``artifacts/BENCH_llm_offload.json`` artifacts. The ue_scaling ledger enforces the giant-fleet story: per-UE
 jitted iteration cost at N=256 at most 0.5x the N=16 per-UE cost, and
 the fused pair-scorer kernel beating its naive reference on call_us at
 N>=256 while matching it numerically. The generalization ledger also
@@ -20,7 +21,11 @@ policy vs nearest-server greedy on the inverted alt-pool layout and an
 unseen E=3 pool. The streaming ledger enforces the QoS wins: the
 streaming-fine-tuned entity dispatcher vs nearest-server on p99 sojourn
 at mid load and deadline-miss rate at saturation (quick/full; smoke
-enforces the training-free oracle on the same two gates).
+enforces the training-free oracle on the same two gates). The
+llm_offload ledger enforces the mixed CNN+LLM pool story: the entity
+policy vs nearest-server greedy, and the long-context rung's realized
+throughput vs its split table's Eq. 7/8 closed form (training-free —
+gated in smoke too).
 """
 from __future__ import annotations
 
@@ -75,18 +80,25 @@ def main() -> None:
         _section("fig4/5 compression (AE vs JALAD, xi ablation)")
         from benchmarks import bench_compression
         t0 = time.time()
-        out = bench_compression.run(quick=quick)
+        out = bench_compression.run(quick=quick, smoke=smoke)
         results["compression"] = out
         per = (time.time() - t0) * 1e6 / max(len(out["rows"]), 1)
         for r in out["rows"]:
             _emit(f"fig4_point{r['point']}", per,
                   f"ae_rate={r['ae_rate']:.0f};jalad_rate={r['jalad_rate']:.1f};"
                   f"acc={r['ae_acc']:.3f};base={r['base_acc']:.3f}")
-        xi = bench_compression.run_xi_ablation(quick=quick)
+        xi = bench_compression.run_xi_ablation(quick=quick, smoke=smoke)
         results["xi"] = xi
         for r in xi["rows"]:
             _emit(f"fig5_point{r['point']}_xi{r['xi']}", 0.0,
                   f"acc={r['acc']:.3f}")
+        os.makedirs("artifacts", exist_ok=True)
+        artifact = {"bench": "compression", "schema": 1,
+                    "smoke": smoke, "quick": quick,
+                    "rows": out["rows"], "xi_rows": xi["rows"]}
+        with open("artifacts/BENCH_compression.json", "w") as f:
+            json.dump(artifact, f, indent=1, default=float)
+        print("# wrote artifacts/BENCH_compression.json", flush=True)
 
     if want("overhead"):
         _section("fig7 overhead tables + long-task throughput rungs")
@@ -274,6 +286,57 @@ def main() -> None:
         with open("artifacts/BENCH_multi_server.json", "w") as f:
             json.dump(artifact, f, indent=1, default=float)
         print("# wrote artifacts/BENCH_multi_server.json", flush=True)
+
+    if want("llm_offload"):
+        _section("llm decode offloading (mixed CNN+LLM pool, context "
+                 "rungs)")
+        from benchmarks import bench_llm_offload
+        out = bench_llm_offload.run(quick=quick, smoke=smoke)
+        results["llm_offload"] = out
+        for r in out["rows"]:
+            _emit(f"llm_offload_{r['policy']}", 0.0,
+                  f"overhead={r['overhead']:.4f};"
+                  f"t_s={r['t_task']:.3f};"
+                  f"e_mJ={1e3*r['e_task']:.1f}"
+                  + (f";route={''.join(map(str, r['route']))}"
+                     if "route" in r else ""))
+        for m in out["modes"]["rows"]:
+            _emit(f"llm_offload_mode_{m['ue']}", 0.0,
+                  f"split={m['split']};local={m['local']};"
+                  f"server={m['route']}")
+        _emit("llm_offload_ctx_shift", 0.0,
+              f"ctx_shift={out['ctx_shift']};"
+              f"beats_nearest={out['beats_nearest']}")
+        for r in out["flops_rows"]:
+            _emit(f"llm_offload_flops_ctx{r['ctx']}", 0.0,
+                  f"table={r['table_flops']:.3e};"
+                  f"convention={r['convention_flops']:.3e};"
+                  f"ratio={r['ratio']:.2f}")
+        for p in out["parity"]:
+            guard("llm_offload", p["name"], p["ratio"], p["limit"])
+        cf = bench_llm_offload.run_closed_form(smoke=smoke)
+        results["llm_offload_closed_form"] = cf
+        for r in cf["rows"]:
+            _emit(f"llm_offload_closed_form_{r['rung']}", 0.0,
+                  f"t_task_s={r['t_task_s']:.1f};"
+                  f"expected={r['expected_per_frame']:.4f};"
+                  f"realized={r['realized_per_frame']:.4f};"
+                  f"ratio={r['ratio']:.3f}")
+        for p in cf["parity"]:
+            guard("llm_offload", p["name"], p["ratio"], p["limit"])
+        os.makedirs("artifacts", exist_ok=True)
+        artifact = {"bench": "llm_offload", "schema": 1,
+                    "smoke": smoke, "quick": quick,
+                    "rows": out["rows"], "modes": out["modes"],
+                    "ctx_shift": out["ctx_shift"],
+                    "beats_nearest": out["beats_nearest"],
+                    "flops_rows": out["flops_rows"],
+                    "closed_form_rows": cf["rows"],
+                    "train_s": out["train_s"],
+                    "parity": out["parity"] + cf["parity"]}
+        with open("artifacts/BENCH_llm_offload.json", "w") as f:
+            json.dump(artifact, f, indent=1, default=float)
+        print("# wrote artifacts/BENCH_llm_offload.json", flush=True)
 
     if want("generalization"):
         _section("fleet-generalist shared policy (zero-shot N / pool "

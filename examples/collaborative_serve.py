@@ -44,6 +44,17 @@ finishes by dropping the trained agent onto an E+1-server pool:
 
   PYTHONPATH=src python examples/collaborative_serve.py --entity-policy \\
       --servers 2
+
+With ``--llm`` the fleet is the MIXED CNN + LLM-decode scenario of
+``benchmarks/bench_llm_offload.py``: two ResNet18 UEs plus one
+qwen3-1.7b decode UE per context rung (256 / 1024 / 4096), whose
+boundary payload (compressed hidden states + UE-side KV cache) GROWS
+with context, against a thin multi-tenant v5e slice + edge-GPU pool.
+The demo prints each rung's learned split and whether the
+context-length-dependent shift (short rungs offload, the long rung
+stays local) has emerged:
+
+  PYTHONPATH=src python examples/collaborative_serve.py --llm
 """
 import argparse
 
@@ -101,7 +112,7 @@ def run_split_forward(params, cfg, tokens, split_layer, ae, bits=8):
 def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
                    leave_rate=0.0, n_servers=1, shared_policy=False,
                    entity_policy=False, n_ue=4, fused_scorer=False,
-                   n_shards=1):
+                   n_shards=1, llm=False):
     """Mixed-fleet scheduling: per-UE split tables + device tiers end-to-end
     through MAHPPO, vs the non-coordinating greedy heuristic. With nonzero
     churn/leave rates the fleet is DYNAMIC: UEs join from a standby pool and
@@ -111,21 +122,39 @@ def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
     feature rows (`env.observe_per_ue`) replaces the N per-UE actors —
     O(1) parameters in the fleet size, and the trained agent transfers
     zero-shot to other fleet sizes (see benchmarks/bench_generalization.py)."""
-    from repro.core.fleets import (make_edge_pool, make_mixed_fleet,
+    from repro.core.fleets import (EdgePool, LLM_CTX_RUNGS, make_edge_pool,
+                                   make_llm_mixed_fleet, make_mixed_fleet,
                                    random_pool_ranges)
     from repro.env.mecenv import MECEnv, make_env_params
     from repro.rl import nets
     from repro.rl.heuristics import greedy_eval
     from repro.rl.mahppo import MAHPPOConfig, evaluate_policy, train_mahppo
 
-    fleet = make_mixed_fleet(arch, n_ue=n_ue)
+    t0 = 0.5
+    if llm:
+        # the bench_llm_offload scenario: CNN UEs + one LLM-decode UE per
+        # context rung, against a thin multi-tenant v5e slice and an
+        # interference-free edge-GPU tier; long frames (t0 = 2 s) so the
+        # ctx-4096 rung's full-local run spans multiple frames
+        from repro.core import overhead as oh_
+        fleet = make_llm_mixed_fleet(arch)
+        t0 = 2.0
+        print(f"LLM context rungs: {LLM_CTX_RUNGS} (f_bits grows with "
+              f"context — KV cache rides the boundary payload)")
+    else:
+        fleet = make_mixed_fleet(arch, n_ue=n_ue)
     print("fleet:")
     for i, (name, prof) in enumerate(zip(fleet.names, fleet.profiles)):
         feas = int(fleet.feasible[i].sum())
         print(f"  ue{i}: {name:14s} on {prof.name:12s} "
               f"(P_compute={prof.p_compute:.1f} W, "
               f"{feas}/{fleet.n_actions} feasible actions)")
-    pool = make_edge_pool(n_servers) if n_servers > 1 else None
+    if llm:
+        pool = EdgePool((
+            oh_.ServerProfile.from_device(oh_.TPU_V5E, utilization=0.025),
+            oh_.ServerProfile.from_device(oh_.EDGE_GPU, dist_scale=1.4)))
+    else:
+        pool = make_edge_pool(n_servers) if n_servers > 1 else None
     if pool is not None:
         print("edge pool:")
         for e, srv in enumerate(pool.servers):
@@ -133,9 +162,9 @@ def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
                   f"bw x{srv.bw_scale:.1f}  "
                   f"edge_speed={srv.edge_speed/1e12:.1f} TFLOP/s")
 
-    randomize = entity_policy and pool is not None
+    randomize = entity_policy and pool is not None and not llm
     env = MECEnv(make_env_params(
-        fleet, n_channels=2, churn_rate=churn_rate,
+        fleet, n_channels=2, t0=t0, churn_rate=churn_rate,
         leave_rate=leave_rate, pool=pool,
         pool_ranges=random_pool_ranges(pool.n_servers) if randomize
         else None))
@@ -253,10 +282,19 @@ def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
                              minlength=env.n_servers)
         print(f"  learned route distribution: "
               + ", ".join(f"srv{e}={int(c)}" for e, c in enumerate(counts)))
+    if llm:
+        b_llm = np.asarray(a_star["split"])[-len(LLM_CTX_RUNGS):]
+        local = env.n_actions_b - 1
+        offl = b_llm[:-1][b_llm[:-1] != local]
+        shift = offl.size > 0 and (b_llm[-1] == local
+                                   or b_llm[-1] > offl.min())
+        print(f"  context-length shift (short rungs offload, "
+              f"ctx{LLM_CTX_RUNGS[-1]} stays local/later): "
+              f"{'YES' if shift else 'not yet at this budget'}")
 
     # entity policies transfer across pool SIZE: drop the identical
     # parameters onto an E+1-server pool, zero-shot
-    if entity_policy and env.multi_server and n_servers < 3:
+    if entity_policy and env.multi_server and n_servers < 3 and not llm:
         from repro.rl.baselines import nearest_server_eval
         env_big = MECEnv(make_env_params(
             fleet, n_channels=2, pool=make_edge_pool(n_servers + 1)))
@@ -313,6 +351,11 @@ def main():
                          "kernel path (kernels.ops.pair_scorer; implies "
                          "--entity-policy) — same logits, no (N, E, .) "
                          "intermediates, the giant-fleet hot path")
+    ap.add_argument("--llm", action="store_true",
+                    help="schedule the mixed CNN + LLM-decode fleet (one "
+                         "UE per context rung; KV cache rides the "
+                         "boundary payload) on the bench_llm_offload "
+                         "pool — implies --entity-policy")
     ap.add_argument("--n-shards", type=int, default=1, metavar="K",
                     help="shard rollout collection over K devices (on "
                          "CPU set XLA_FLAGS=--xla_force_host_platform_"
@@ -327,12 +370,15 @@ def main():
                  "cannot combine with --shared-policy")
     if args.fused_scorer:
         args.entity_policy = True
+    if args.llm:
+        args.entity_policy = True   # the scenario is about routing
     if args.entity_policy and args.servers < 2:
         args.servers = 2       # the route scorer needs a pool to score
     churn = (args.churn or args.churn_rate is not None
              or args.leave_rate is not None)
     if args.fleet or churn or args.servers > 1 or args.shared_policy \
-            or args.entity_policy or args.n_ue != 4 or args.n_shards > 1:
+            or args.entity_policy or args.n_ue != 4 or args.n_shards > 1 \
+            or args.llm:
         run_fleet_demo(
             args.arch, args.iterations,
             churn_rate=(0.2 if args.churn_rate is None
@@ -341,7 +387,8 @@ def main():
                         else args.leave_rate) if churn else 0.0,
             n_servers=args.servers, shared_policy=args.shared_policy,
             entity_policy=args.entity_policy, n_ue=args.n_ue,
-            fused_scorer=args.fused_scorer, n_shards=args.n_shards)
+            fused_scorer=args.fused_scorer, n_shards=args.n_shards,
+            llm=args.llm)
         return
 
     cfg = reduced(get_config(args.arch), n_layers=4)

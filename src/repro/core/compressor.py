@@ -60,10 +60,13 @@ def init_autoencoder(key, ch, ch_prime):
 def pca_init_autoencoder(feats, ch_prime):
     """Closed-form optimal LINEAR autoencoder: top principal components of
     the boundary features (beyond-paper: the paper random-inits and trains;
-    PCA init converges in a fraction of the steps). feats: (N, ..., C)."""
-    f = feats.reshape(-1, feats.shape[1] if feats.ndim == 4 else feats.shape[-1])
+    PCA init converges in a fraction of the steps). feats: (B, C, H, W)
+    CNN features (channels at axis 1, samples over B*H*W) or (..., C)
+    channel-last (samples over all leading axes)."""
     if feats.ndim == 4:  # (B, C, H, W) -> samples over B*H*W
         f = jnp.moveaxis(feats, 1, -1).reshape(-1, feats.shape[1])
+    else:                # (..., C) channel-last
+        f = feats.reshape(-1, feats.shape[-1])
     mu = f.mean(0)
     _, _, vt = jnp.linalg.svd(f - mu, full_matrices=False)
     pcs = vt[:ch_prime].T
@@ -156,6 +159,52 @@ def train_autoencoder(key, model, backbone_params, split_module, data_iter,
         ae, backbone_params = joint["ae"], joint["bb"]
 
     return ae, backbone_params, logs
+
+
+def measure_rate_distortion(model, backbone_params, data_iter_fn,
+                            eval_batch_fn, *, points=None, ratios=(4, 8, 16),
+                            bits=8, steps=30, lr=3e-3, xi=0.1, acc_drop=0.02,
+                            base_acc=None, seed=0):
+    """Per-split-point compressor rate-distortion by the paper's Fig. 4
+    selection rule: at each candidate point, train an AE per channel-
+    reduction ratio and keep the HIGHEST rate whose accuracy stays within
+    `acc_drop` of the no-AE baseline; quant-only R = 32/bits (ch' = ch)
+    is the fallback when no ratio qualifies.
+
+    data_iter_fn(pi) -> (x, labels) iterator, fresh stream per point;
+    eval_batch_fn(pi) -> (x, labels) batch for the accuracy check.
+    Returns one row per split point
+      {point, module, channels, ch_prime, bits, rate, acc, base_acc}
+    consumable directly as measured_cnn_split_table(..., rd=rows)."""
+    points = list(model.split_after) if points is None else list(points)
+    if base_acc is None:
+        accs = []
+        for pi in range(len(points)):
+            x, y = eval_batch_fn(pi)
+            logits = cnn_lib.forward(model, backbone_params, x)
+            accs.append(float(jnp.mean((jnp.argmax(logits, -1) == y))))
+        base_acc = float(sum(accs) / len(accs))
+    rows = []
+    for pi, k in enumerate(points):
+        x_eval, y_eval = eval_batch_fn(pi)
+        ch = int(cnn_lib.forward(model, backbone_params, x_eval[:1],
+                                 upto=k + 1).shape[1])
+        best = {"ch_prime": ch, "rate": compression_rate(ch, ch, bits),
+                "acc": base_acc}
+        for rc in ratios:
+            chp = max(1, ch // rc)
+            ae, _, _ = train_autoencoder(
+                jax.random.PRNGKey(seed + pi * 10 + rc), model,
+                backbone_params, k, data_iter_fn(pi), ch=ch, ch_prime=chp,
+                steps=steps, lr=lr, xi=xi)
+            acc = float(accuracy_with_ae(model, backbone_params, ae, k,
+                                         x_eval, y_eval, bits=bits))
+            rate = compression_rate(ch, chp, bits)
+            if acc >= base_acc - acc_drop and rate > best["rate"]:
+                best = {"ch_prime": chp, "rate": rate, "acc": acc}
+        rows.append({"point": pi + 1, "module": k, "channels": ch,
+                     "bits": bits, "base_acc": base_acc, **best})
+    return rows
 
 
 def accuracy_with_ae(model, backbone_params, ae, split_module, x, labels,

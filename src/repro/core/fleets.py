@@ -13,7 +13,7 @@ import numpy as np
 from repro.core import overhead as oh
 from repro.core.cnn import make_resnet18
 from repro.core.split import (FleetPlan, build_fleet, cnn_split_table,
-                              transformer_split_table)
+                              llm_decode_split_table, transformer_split_table)
 
 
 def make_mixed_fleet(arch: str = "qwen3-1.7b", n_ue: int = 4) -> FleetPlan:
@@ -32,6 +32,37 @@ def make_mixed_fleet(arch: str = "qwen3-1.7b", n_ue: int = 4) -> FleetPlan:
             (transformer_split_table(tcfg, ue_dev=oh.PHONE_NPU),
              oh.PHONE_NPU)]
     picks = [base[i % len(base)] for i in range(n_ue)]
+    return build_fleet([p for p, _ in picks], [d for _, d in picks])
+
+
+# 2-3 context lengths exposed as DISTINCT task classes: each rung is its
+# own SplitPlan (own f_bits curve, own full-local seconds), so a mixed
+# fleet carries short-, mid- and long-context LLM UEs side by side with
+# CNN UEs and the policy can treat them differently.
+LLM_CTX_RUNGS = (256, 1024, 4096)
+
+
+def make_llm_mixed_fleet(arch: str = "qwen3-1.7b", n_cnn: int = 2,
+                         ctx_rungs=LLM_CTX_RUNGS, *, gen_tokens: int = 16,
+                         kv_bits: int = 8) -> FleetPlan:
+    """Mixed CNN + LLM-decode fleet: ``n_cnn`` ResNet18 UEs (Jetson / IoT
+    alternating, the same device mix as ``make_mixed_fleet``) plus one
+    LLM-decode UE per context rung on a phone NPU
+    (``core.split.llm_decode_split_table``). CNN-feature offloading
+    (payload shrinks with depth) and KV-cache offloading (payload grows
+    with context) compete for the same channels and edge servers."""
+    from repro.configs import get_config
+    cnn = make_resnet18(101)
+    cnn_devs = (oh.JETSON_NANO, oh.IOT_SOC)
+    picks = [(cnn_split_table(cnn, 224, dev=cnn_devs[i % 2]), cnn_devs[i % 2])
+             for i in range(n_cnn)]
+    cfg = get_config(arch)
+    for ctx in ctx_rungs:
+        picks.append((llm_decode_split_table(cfg, ctx,
+                                             gen_tokens=gen_tokens,
+                                             ue_dev=oh.PHONE_NPU,
+                                             kv_bits=kv_bits),
+                      oh.PHONE_NPU))
     return build_fleet([p for p, _ in picks], [d for _, d in picks])
 
 

@@ -19,6 +19,8 @@ import numpy as np
 def build_code(symbols: np.ndarray) -> Dict[int, str]:
     """Canonical Huffman code lengths from symbol frequencies."""
     freq = Counter(symbols.tolist())
+    if not freq:
+        return {}
     if len(freq) == 1:
         (s, _), = freq.items()
         return {s: "0"}
@@ -53,6 +55,8 @@ def build_code(symbols: np.ndarray) -> Dict[int, str]:
 def encode(symbols: np.ndarray) -> Tuple[bytes, Dict[int, str], int]:
     """Returns (bitstream bytes, code table, n_symbols)."""
     code = build_code(symbols)
+    if not code:
+        return b"", code, 0
     bits = "".join(code[s] for s in symbols.tolist())
     pad = (-len(bits)) % 8
     bits += "0" * pad
@@ -61,6 +65,10 @@ def encode(symbols: np.ndarray) -> Tuple[bytes, Dict[int, str], int]:
 
 
 def decode(stream: bytes, code: Dict[int, str], n: int) -> np.ndarray:
+    if n == 0:
+        return np.empty(0, np.int64)
+    if not code:
+        raise ValueError("empty code table with n > 0")
     rev = {v: k for k, v in code.items()}
     maxlen = max(len(v) for v in code.values())
     bits = "".join(f"{b:08b}" for b in stream)

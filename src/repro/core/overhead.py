@@ -196,6 +196,78 @@ def layer_costs(cfg: ModelConfig, seq_len: int) -> List[dict]:
     return out
 
 
+def decode_layer_costs(cfg: ModelConfig, ctx_len: int) -> List[dict]:
+    """Per-layer {flops, bytes, param_bytes} of ONE decode step at context
+    length ``ctx_len``: s = 1 projections, attention scores over the
+    (window-capped) context, and the layer's serving-cache bytes READ per
+    token — decode is memory-bound, so the cache traffic is the term that
+    grows with context. SSM/RG-LRU layers update O(1) state and are
+    constant in ctx_len."""
+    d, dh = cfg.d_model, cfg.head_dim
+    hq, hkv, f = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    act = 2 * d * 2  # in+out hidden for the single token, bf16
+    kv_el = 1 if cfg.kv_quant_bits else 2   # int8 codes vs bf16
+    out = []
+    for bt in cfg.block_types():
+        if bt == "mamba2":
+            ss = cfg.ssm
+            di = ss.expand * d
+            h = di // ss.head_dim
+            n = ss.d_state
+            proj = 2 * d * (2 * di + 2 * n + h) + 2 * di * d
+            step = 2 * h * ss.head_dim * n * 3
+            pbytes = (d * (2 * di + 2 * n + h) + di * d) * 2
+            state_b = h * ss.head_dim * n * 4 \
+                + (ss.d_conv - 1) * (di + 2 * n) * 2
+            out.append({"flops": proj + step,
+                        "bytes": pbytes + state_b + act,
+                        "param_bytes": pbytes})
+            continue
+        if bt == "rec":
+            drnn = d
+            fl = 2 * d * drnn * 2 + 2 * drnn * drnn * 2 + 2 * drnn * d \
+                + 6 * d * f
+            pbytes = (2 * d * drnn + 2 * drnn * drnn + drnn * d
+                      + 3 * d * f) * 2
+            out.append({"flops": fl, "bytes": pbytes + drnn * 4 + act,
+                        "param_bytes": pbytes})
+            continue
+        # attention part: project the new token, score it against the cache
+        ctx = min(ctx_len, cfg.window) if bt == "lattn" else ctx_len
+        attn_proj = 2 * d * (hq + 2 * hkv) * dh + 2 * hq * dh * d
+        attn_qk = 4 * ctx * hq * dh
+        a_params = (d * (hq + 2 * hkv) * dh + hq * dh * d) * 2
+        cache_b = 2 * ctx * hkv * dh * kv_el \
+            + (2 * ctx * hkv * 4 if cfg.kv_quant_bits else 0)
+        fl = attn_proj + attn_qk
+        pbytes = a_params
+        if bt == "xattn":
+            fl = 2 * d * hq * dh + 2 * hq * dh * d \
+                + 4 * cfg.n_aux_tokens * hq * dh
+            cache_b = 2 * cfg.n_aux_tokens * hkv * dh * 2
+        if bt == "decx":
+            nf = cfg.encoder.n_frames if cfg.encoder else 0
+            fl += 2 * d * hq * dh + 2 * hq * dh * d + 4 * nf * hq * dh
+            pbytes += a_params
+            cache_b += 2 * nf * hkv * dh * 2
+        # ffn part
+        if bt == "moe":
+            m = cfg.moe
+            ffl = 2 * d * m.n_experts  # router
+            ffl += 6 * d * m.d_expert * (m.top_k + m.n_shared_experts)
+            fp = (m.n_experts + m.n_shared_experts) * 3 * d * m.d_expert * 2
+            fbytes = 3 * d * m.d_expert * (m.top_k + m.n_shared_experts) * 2
+        else:
+            mult = 3 if cfg.act == "swiglu" else 2
+            ffl = mult * 2 * d * f
+            fp = mult * d * f * 2
+            fbytes = fp
+        out.append({"flops": fl + ffl,
+                    "bytes": pbytes + fbytes + cache_b + act,
+                    "param_bytes": pbytes + fp})
+    return out
+
+
 def embed_costs(cfg: ModelConfig, seq_len: int) -> dict:
     pb = cfg.vocab_size * cfg.d_model * 2
     return {"flops": 2 * seq_len * cfg.d_model * cfg.vocab_size,  # lm head

@@ -287,3 +287,163 @@ def split_table(target, **kw) -> SplitPlan:
     if isinstance(target, CNNModel):
         return cnn_split_table(target, kw.pop("in_size", 224), **kw)
     return transformer_split_table(target, **kw)
+
+
+# ------------------------------------------------------- measured tables
+def measured_cnn_module_costs(model: CNNModel, in_size: int, *,
+                              batch=1) -> List[dict]:
+    """Per-module {flops, bytes_accessed, hlo_dot_flops} from XLA itself:
+    each module's forward is lowered + compiled against abstract params
+    (nothing is materialized or executed) and the compiled cost analysis
+    read out via launch.hloanalysis.compiled_costs. Unlike
+    CNNModel.module_flops (the hand-derived conv walker), this counts
+    everything XLA will actually run — BN reductions, elementwise ops,
+    padding copies — and it is the same pipeline launch/dryrun.py records
+    for the assigned transformer archs."""
+    import jax
+    from repro.launch.hloanalysis import compiled_costs
+
+    pstruct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    shapes = model.feature_shapes(in_size)
+    costs = []
+    for i in range(model.n_modules):
+        in_shape = ((batch, 3, in_size, in_size) if i == 0
+                    else (batch,) + tuple(shapes[i - 1]))
+        x = jax.ShapeDtypeStruct(in_shape, np.float32)
+
+        def mod_fwd(p, x, _i=i):
+            return model.run_module(p, _i, x)
+
+        costs.append(compiled_costs(mod_fwd, pstruct[i], x))
+    return costs
+
+
+def measured_cnn_split_table(model: CNNModel, in_size: int, *,
+                             dev=oh.JETSON_NANO, rd=None,
+                             ae_ratio=(16, 12, 8, 4), quant_bits=8,
+                             batch=1, input_bits_per_px=8,
+                             module_costs=None) -> SplitPlan:
+    """``cnn_split_table`` with MEASURED inputs instead of paper constants:
+
+    * per-module FLOPs and bytes from the compiled-HLO cost analysis
+      (``measured_cnn_module_costs``) through the same
+      ``core.overhead.module_time_energy`` device model — in particular
+      the memory side uses XLA's real bytes-accessed instead of the
+      flops/8 heuristic;
+    * per-split-point compressor rate-distortion from a measured sweep
+      (``core.compressor.measure_rate_distortion``: trained AE at each
+      candidate point, rate selected by the paper's 2%-accuracy rule),
+      passed as ``rd``; the paper's ``ae_ratio`` constants remain the
+      fallback when ``rd`` is None.
+
+    Opt-in: the default ``cnn_split_table`` (paper constants) is untouched
+    and stays golden-pinned. ``module_costs`` lets callers reuse a sweep."""
+    costs = (measured_cnn_module_costs(model, in_size, batch=batch)
+             if module_costs is None else module_costs)
+    shapes = model.feature_shapes(in_size)
+    points = list(model.split_after)
+    if rd is not None and len(rd) != len(points):
+        raise ValueError(f"rd has {len(rd)} rows for {len(points)} points")
+    if not hasattr(ae_ratio, "__len__"):
+        ae_ratio = [ae_ratio] * len(points)
+    cum_fl = np.cumsum([c["flops"] for c in costs])
+    cum_by = np.cumsum([c["bytes_accessed"] for c in costs])
+    rows = []
+    raw_bits = batch * 3 * in_size * in_size * input_bits_per_px
+    rows.append((0.0, 0.0, 0.0, 0.0, raw_bits, True))
+    for pi, k in enumerate(points):
+        t, e = oh.module_time_energy(cum_fl[k], cum_by[k], dev)
+        c, h, w = shapes[k]
+        if rd is not None:
+            cp = int(rd[pi]["ch_prime"])
+            q = int(rd[pi].get("bits", quant_bits))
+        else:
+            cp = max(1, c // ae_ratio[pi])
+            q = quant_bits
+        enc_fl = 2 * c * cp * h * w * batch
+        tc, ec = oh.module_time_energy(enc_fl, enc_fl / 4, dev)
+        rows.append((t, e, tc, ec, batch * cp * h * w * q, True))
+    t, e = oh.module_time_energy(cum_fl[-1], cum_by[-1], dev)
+    rows.append((t, e, 0.0, 0.0, 0.0, True))
+    return _finalize(model.name + "-measured", points, rows, device=dev.name)
+
+
+def llm_decode_split_table(cfg: ModelConfig, ctx_len: int, *,
+                           gen_tokens=32, ue_dev=oh.PHONE_NPU, n_points=4,
+                           ae_ratio=None, quant_bits=None, kv_bits=None,
+                           batch=1) -> SplitPlan:
+    """LLM decode offloading: the intermediate feature IS the serving
+    state, and its size grows with context length.
+
+    A task serves one request of ``ctx_len`` context tokens plus
+    ``gen_tokens`` generated tokens. A split b = k hands the edge
+    everything above layer k: the UE prefills layers [0, k) over the
+    context, then ships the AE-compressed boundary hidden-state sequence
+    (ctx_len x d') PLUS the UE-side layers' serving cache
+    (``models.cache.entry_payload_bits`` — KV at ``kv_bits``, sliding
+    windows capped, SSM/RG-LRU O(1) state), so the edge can finish the
+    prefill at layer k and decode through the full stack without redoing
+    the UE's work. ``f_bits`` is therefore a FUNCTION OF CONTEXT LENGTH —
+    a fundamentally different overhead curve than CNN features, where the
+    payload shrinks with depth.
+
+      b = 0    ship the raw token ids; the edge does everything
+      b = k    UE prefills layers [0, k); payload = hiddens + cache
+      b = B+1  full local: prefill + gen_tokens decode steps on the UE
+
+    ``kv_bits`` overrides cfg.kv_quant_bits for the SHIPPED cache (0 =
+    16-bit). Opt-in like the other measured builders; the default
+    ``transformer_split_table`` is untouched."""
+    from repro.models.cache import entry_payload_bits
+
+    ctx_len = int(ctx_len)
+    if kv_bits is not None:
+        cfg = cfg.replace(kv_quant_bits=kv_bits)
+    ae_ratio = ae_ratio or cfg.bottleneck_ratio
+    quant_bits = quant_bits or cfg.quant_bits
+    btypes = cfg.block_types()
+    L = len(btypes)
+    pre = oh.layer_costs(cfg, ctx_len)
+    dec = oh.decode_layer_costs(cfg, ctx_len)
+    points = [max(1, round(L * (i + 1) / (n_points + 1)))
+              for i in range(n_points)]
+
+    embed_pb = cfg.vocab_size * cfg.d_model * 2
+    cum_fl = np.cumsum([l["flops"] for l in pre]) * batch
+    cum_by = np.cumsum([l["bytes"] for l in pre]) * batch
+    cum_pb = np.cumsum([l["param_bytes"] for l in pre])
+    cum_kv = np.cumsum([entry_payload_bits(cfg, bt, batch, ctx_len)
+                        for bt in btypes])
+
+    d = cfg.d_model
+    dprime = max(1, d // ae_ratio)
+    rows = []
+    # b = 0: raw token ids
+    rows.append((0.0, 0.0, 0.0, 0.0, ctx_len * 32 * batch, True))
+    for k in points:
+        t, e = oh.module_time_energy(cum_fl[k - 1], cum_by[k - 1], ue_dev)
+        enc_fl = 2 * ctx_len * d * dprime * batch
+        tc, ec = oh.module_time_energy(enc_fl, enc_fl / 4, ue_dev)
+        bits = ctx_len * dprime * quant_bits * batch + cum_kv[k - 1]
+        ue_bytes = embed_pb + cum_pb[k - 1] + cum_kv[k - 1] / 8
+        rows.append((t, e, tc, ec, bits, ue_bytes <= ue_dev.mem_bytes))
+    # b = B+1: full-local prefill + decode (multi-frame on seconds scale)
+    emb = oh.embed_costs(cfg, 1)
+    dec_fl = sum(l["flops"] for l in dec) * batch + emb["flops"] * batch
+    dec_by = sum(l["bytes"] for l in dec) * batch + emb["bytes"]
+    t, e = oh.module_time_energy(cum_fl[-1] + gen_tokens * dec_fl,
+                                 cum_by[-1] + gen_tokens * dec_by, ue_dev)
+    total_pb = embed_pb + cum_pb[-1] + (emb["param_bytes"] - embed_pb)
+    ue_bytes = total_pb + cum_kv[-1] / 8
+    rows.append((t, e, 0.0, 0.0, 0.0, ue_bytes <= ue_dev.mem_bytes))
+    name = f"{cfg.name}-decode-ctx{ctx_len}"
+    return _finalize(name, points, rows, device=ue_dev.name)
+
+
+def measured_split_table(target, **kw) -> SplitPlan:
+    """Measured-table dispatcher, mirroring ``split_table``: CNNModel ->
+    compiled-HLO-measured table; ModelConfig -> LLM-decode table (pass
+    ``ctx_len``)."""
+    if isinstance(target, CNNModel):
+        return measured_cnn_split_table(target, kw.pop("in_size", 224), **kw)
+    return llm_decode_split_table(target, kw.pop("ctx_len", 1024), **kw)

@@ -137,11 +137,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
            "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2)}
     rec.update(sizes)
     try:
-        ca = compiled.cost_analysis()
-        if isinstance(ca, (list, tuple)):   # older jax: one dict per program
-            ca = ca[0]
-        rec["cost_analysis"] = {k: v for k, v in ca.items()
-                                if isinstance(v, (int, float))}
+        from repro.launch import hloanalysis
+        rec["cost_analysis"] = hloanalysis.cost_analysis_dict(compiled)
     except Exception as e:  # pragma: no cover
         rec["cost_analysis_error"] = str(e)
     try:

@@ -192,3 +192,31 @@ def weighted_dot_flops(text: str):
 def analyze(text: str):
     return {"collectives": weighted_collectives(text),
             "hlo_dot_flops": weighted_dot_flops(text)}
+
+
+def cost_analysis_dict(compiled):
+    """``compiled.cost_analysis()`` normalized across jax versions (older
+    releases return a one-element list of dicts), numeric entries only."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: v for k, v in ca.items() if isinstance(v, (int, float))}
+
+
+def compiled_costs(fn, *args):
+    """Lower + compile ``fn`` on the current backend (args may be
+    ShapeDtypeStructs — nothing is materialized or executed) and return
+    {flops, bytes_accessed, hlo_dot_flops}: the backend's cost analysis
+    with the trip-count-weighted dot FLOPs alongside. ``flops`` falls back
+    to the HLO dot count when the backend reports none. Note convolutions
+    lower to ``convolution(`` not ``dot(``, so for CNNs the backend count
+    is the authoritative one."""
+    import jax
+    compiled = jax.jit(fn).lower(*args).compile()
+    ca = cost_analysis_dict(compiled)
+    flops = float(ca.get("flops", 0.0))
+    byt = float(ca.get("bytes accessed", 0.0))
+    hlo = weighted_dot_flops(compiled.as_text())
+    if flops <= 0.0:
+        flops = hlo
+    return {"flops": flops, "bytes_accessed": byt, "hlo_dot_flops": hlo}

@@ -22,7 +22,10 @@ from repro.models import init_params
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b", choices=ARCH_IDS)
-    ap.add_argument("--reduce", action="store_true", default=True)
+    ap.add_argument("--reduce", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="shrink the config for CPU (--no-reduce for "
+                         "the full-size arch)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
@@ -57,17 +60,19 @@ def main():
           f"{1e3*t_prefill:.1f} ms, cache {cache_bytes/1e6:.1f} MB")
 
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    outs = [tok]                 # the prefill argmax is generated token 0
     t0 = time.time()
-    outs = []
-    for i in range(args.gen):
+    n_steps = max(args.gen - 1, 0)
+    for i in range(n_steps):
         logits, cache = serve_step(params, cache, tok,
                                    jnp.int32(args.prompt_len + i))
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         outs.append(tok)
     jax.block_until_ready(tok)
     dt = time.time() - t0
-    print(f"[serve] decoded {args.gen} tokens/seq: "
-          f"{1e3*dt/args.gen:.1f} ms/token (batch {args.batch})")
+    print(f"[serve] decoded {args.gen} tokens/seq "
+          f"({n_steps} decode steps): "
+          f"{1e3*dt/max(n_steps, 1):.1f} ms/token (batch {args.batch})")
     gen = jnp.concatenate(outs, axis=1)
     print(f"[serve] sample continuation (seq 0): {gen[0][:16].tolist()}")
 

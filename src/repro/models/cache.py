@@ -105,6 +105,30 @@ def entry_shape(cfg, btype, batch, attn_len):
     return e
 
 
+def entry_payload_bits(cfg, btype, batch, ctx_len):
+    """Bits to ship one layer's serving-cache state for a `ctx_len`-token
+    context: ``entry_shape``'s leaves with sequence axes at the FILLED
+    length (min(ctx_len, window) for sliding-window layers — the ring
+    buffer never holds more), honoring ``kv_quant_bits`` (int8 codes +
+    f32 per-(slot, head) scales). SSM/RG-LRU layers carry O(1) state.
+    The boundary payload of an LLM-decode split
+    (core.split.llm_decode_split_table) sums this over the UE-side
+    layers, which is what makes f_bits a function of context length."""
+    import numpy as np
+    ctx_len = int(ctx_len)
+    if ctx_len < 1:
+        raise ValueError("ctx_len must be >= 1")
+    if btype == "lattn" and cfg.window:
+        cfg = cfg.replace(window=min(ctx_len, cfg.window))
+    total = 0
+    for shape, dtype in entry_shape(cfg, btype, batch, ctx_len).values():
+        n = 1
+        for s in shape:
+            n *= int(s)
+        total += n * np.dtype(dtype).itemsize * 8
+    return int(total)
+
+
 def make_cache(cfg, batch, attn_len, leaf_fn=None):
     """Build the full cache pytree. leaf_fn(shape, dtype) -> leaf;
     defaults to zeros (pos leaves get -1)."""

@@ -13,7 +13,7 @@ except ImportError:
     given = None
 
 from repro.core.compressor import quantize
-from repro.core.huffman import coded_size_bits, decode, encode
+from repro.core.huffman import build_code, coded_size_bits, decode, encode
 from repro.core.jalad import byte_entropy_bits
 
 if given is not None:
@@ -38,6 +38,21 @@ def test_huffman_size_close_to_entropy_estimate():
     actual = coded_size_bits(sym)
     est = float(byte_entropy_bits(jnp.asarray(sym), 8)) * sym.size
     assert abs(actual - est) / est < 0.02
+
+
+def test_huffman_empty_input():
+    """n = 0 round-trips through every codec entry point: empty code
+    table, empty stream, empty decode, zero coded size — and decoding a
+    nonempty count against an empty table is an error, not a hang."""
+    empty = np.empty(0, np.int64)
+    assert build_code(empty) == {}
+    stream, table, n = encode(empty)
+    assert (stream, table, n) == (b"", {}, 0)
+    back = decode(stream, table, n)
+    assert back.size == 0
+    assert coded_size_bits(empty) == 0
+    with pytest.raises(ValueError):
+        decode(b"", {}, 3)
 
 
 def test_huffman_beats_raw_on_peaky_data():
