@@ -98,6 +98,32 @@ def paired_ratio(samples_a, samples_b):
     return ratios[mid] if n % 2 else 0.5 * (ratios[mid - 1] + ratios[mid])
 
 
+def forward_us(cells, n_timed=20):
+    """Batch-sweep forward timer: ``cells`` maps a label (by convention
+    "candidate@batch") to a ZERO-ARG jitted thunk. Every cell is warmed
+    once (compile excluded), then timed over ``n_timed`` INTERLEAVED
+    rounds (A, B, ..., A, B, ...) — `paired_iter_samples`' philosophy
+    for plain forwards: a load burst lands on every cell in its round
+    and mostly cancels out of cross-cell comparisons, where sequential
+    blocks would let one candidate alone catch a quiet slice. Returns
+    {label: {"best_us", "mean_us", "tail"}} with ``tail`` the shared
+    `tail_stats` percentiles over the per-round samples — both
+    `bench_policy_latency`'s µs/decision sweep and `bench_streaming`'s
+    dispatch-latency quotes come from this one harness."""
+    labels = list(cells)
+    for lb in labels:
+        jax.block_until_ready(cells[lb]())
+    samples = {lb: [] for lb in labels}
+    for _ in range(n_timed):
+        for lb in labels:
+            t0 = time.perf_counter()
+            jax.block_until_ready(cells[lb]())
+            samples[lb].append((time.perf_counter() - t0) * 1e6)
+    return {lb: {"best_us": min(s), "mean_us": sum(s) / len(s),
+                 "tail": tail_stats(s)}
+            for lb, s in samples.items()}
+
+
 def call_us(fn, *args, iters=3, reduce="mean"):
     """Wall time per call of ``fn(*args)`` (us), first call excluded as
     warm-up/compile. Blocks on whatever pytree the call returns."""

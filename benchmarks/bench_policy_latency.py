@@ -1,0 +1,317 @@
+"""Train big, serve small: policy-latency bench for the distilled trunk.
+
+At production scale the scheduler is itself a serving workload — the
+policy prices a dispatch decision for every task arrival, so actor-
+forward microseconds sit on the hot path of every Eq. 7/8 service (the
+PR-8 streaming runtime measures them live as ``dispatch_us``). This
+bench builds the full train-big/serve-small pipeline and prices it:
+
+  1. TRAIN BIG — entity teacher on randomized pool geometries (the
+     generalist recipe of ``bench_streaming``), then streaming-tuned by
+     oracle distillation (quick/full; smoke skips the tune),
+  2. SERVE SMALL — ``rl.distill`` DAgger-distills the teacher into the
+     flat trunk (one fused MLP pass over ``observe_per_ue`` rows), then
+     int8 weight-quantizes it for the fused dequant-matmul kernel
+     (``kernels/flat_trunk.py``),
+  3. PRICE IT — ``forward_us`` (the shared interleaved best-of-k
+     harness) sweeps µs/decision at batch 1 and batch 10k for
+     {entity teacher, distilled f32, distilled int8}, plus
+     end-overhead fidelity on the deployment pool and a live
+     ``TrunkDispatcher`` stream at mid load.
+
+Batch semantics: a batch-1 "decision" is ONE dispatch — for the teacher
+that is one entity forward over the live state (its N rows are
+intrinsic to pricing a single dispatch, exactly how EntityDispatcher
+runs it); for the trunk it is one feature row. At batch 10k the teacher
+prices ceil(10k/N) vmapped states; the trunk streams a (10k, F) row
+block through one fused pass — the serving-throughput regime where the
+quantized kernel's resident weights pay off.
+
+Ledger gates (quick/full): distilled-trunk/teacher overhead ratio
+<= 1.05 on the deployment pool, distilled f32 batch-1 forward
+<= 0.5x the teacher's µs, int8 kernel parity vs ``ref.flat_trunk_ref``,
+trunk-dispatcher p99 <= nearest-server at mid-load streaming, and
+student params <= 25% of the teacher's. Smoke keeps the training budget
+tiny and gates only the training-free half: kernel parity, the param
+ratio, and trunk-completes-tasks stream sanity.
+"""
+from __future__ import annotations
+
+import time
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fleets import (make_edge_pool, make_mixed_fleet,
+                               random_pool_ranges)
+from repro.env.mecenv import MECEnv, make_env_params
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.rl import nets
+from repro.rl.distill import (DistillConfig, action_agreement,
+                              distill_entity_policy, quantize_flat_trunk)
+from repro.rl.mahppo import MAHPPOConfig, evaluate_policy, train_mahppo
+from repro.rl.streaming import StreamTuneConfig, finetune_streaming
+from repro.stream.adapter import NearestServerDispatcher, TrunkDispatcher
+from repro.stream.events import StreamParams, StreamSim
+
+try:
+    from benchmarks._timing import forward_us
+except ImportError:                 # run directly as a script
+    from _timing import forward_us
+
+N_UE = 8
+N_SERVERS = 2
+MID_RATE = 4.0                      # bench_streaming's mid-load gate point
+TUNE_RATES = (6.0, 14.0)
+KERNEL_TOL = 1e-4                   # |fused - ref| bound (f32 accumulate)
+
+
+def make_env(randomized=False) -> MECEnv:
+    pool = make_edge_pool(N_SERVERS)
+    ranges = random_pool_ranges(N_SERVERS) if randomized else None
+    return MECEnv(make_env_params(make_mixed_fleet(n_ue=N_UE), n_channels=2,
+                                  pool=pool, pool_ranges=ranges))
+
+
+def _mode_actions(space, dist, masks):
+    return jax.vmap(space.mode)(dist, masks)
+
+
+def _kernel_parity(env, qstudent, student):
+    """Training-free int8 checks: fused-impl-vs-oracle max |logit| error
+    (xla AND interpret-mode pallas), int8-vs-f32 student logit error and
+    mode-action agreement on a mixed real + random row batch."""
+    space = env.action_space
+    key = jax.random.PRNGKey(42)
+    rows_env = env.observe_per_ue(env.reset(key))
+    rows = jnp.concatenate([
+        rows_env,
+        jax.random.normal(key, (256, rows_env.shape[-1]))])
+    ql, bits = qstudent["qlayers"], qstudent["bits"]
+    args = ([l["codes"] for l in ql], [l["mn"] for l in ql],
+            [l["mx"] for l in ql], [l["b"] for l in ql])
+    out_ref = kref.flat_trunk_ref(rows, *args, bits)
+    diffs = {}
+    for impl in ("xla", "pallas"):
+        out = kops.flat_trunk(rows, ql, bits=bits, impl=impl)
+        diffs[impl] = float(jnp.abs(out - out_ref).max())
+    out_q = kops.flat_trunk(rows, ql, bits=bits)
+    out_f = nets._mlp(student["layers"], rows)
+    masks = space.broadcast_masks(None, rows.shape[0])
+    mq = _mode_actions(space, nets.trunk_head_dist(space, out_q, masks),
+                       masks)
+    mf = _mode_actions(space, nets.trunk_head_dist(space, out_f, masks),
+                       masks)
+    agree = np.mean([np.mean(np.asarray(mq[h.name] == mf[h.name]))
+                     for h in space.discrete])
+    return {"kernel_max_diff": diffs, "n_rows": int(rows.shape[0]),
+            "int8_vs_f32_logit_err": float(jnp.abs(out_q - out_f).max()),
+            "int8_vs_f32_mode_agree": float(agree)}
+
+
+def _latency_cells(env, teacher, student, qstudent, batches):
+    """Zero-arg jitted thunks for every (candidate, batch) cell. Params
+    are closed over (frozen deployment weights — and the quantized form's
+    static ``bits`` must not become a tracer)."""
+    space = env.action_space
+    n_ue = env.params.n_ue
+    t_actor = teacher["entity_actor"]
+    s0 = env.reset(jax.random.PRNGKey(0), eval_mode=True)
+    rows0 = env.observe_per_ue(s0)
+    masks0 = space.broadcast_masks(env.action_masks(s0), n_ue)
+
+    def teacher_one(s):
+        masks = space.broadcast_masks(env.action_masks(s), n_ue)
+        dist = nets.entity_actor_forward(t_actor, space,
+                                         env.observe_entities(s), masks)
+        return _mode_actions(space, dist, masks)
+
+    def student_fwd(p, rows, masks):
+        return _mode_actions(
+            space, nets.flat_trunk_forward(p, space, rows, masks), masks)
+
+    cells, meta = {}, {}
+    for b in batches:
+        n_states = max(1, -(-b // n_ue))
+        ss = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_states,) + x.shape), s0)
+        t_fn = jax.jit(lambda ss=ss: jax.vmap(teacher_one)(ss)) \
+            if b > 1 else jax.jit(lambda s=s0: teacher_one(s))
+        reps = -(-b // n_ue)
+        rows_b = jnp.tile(rows0, (reps, 1))[:b]
+        masks_b = jax.tree.map(lambda m: jnp.tile(m, (reps, 1))[:b], masks0)
+        # one teacher forward prices b decisions: ONE dispatch at batch 1
+        # (the EntityDispatcher reality — its N rows are intrinsic), the
+        # full stacked batch in throughput mode
+        cells[f"teacher@{b}"] = t_fn
+        meta[f"teacher@{b}"] = ("teacher", b, b)
+        for name, p in (("student_f32", student), ("student_int8",
+                                                   qstudent)):
+            cells[f"{name}@{b}"] = jax.jit(
+                lambda p=p, r=rows_b, m=masks_b: student_fwd(p, r, m))
+            meta[f"{name}@{b}"] = (name, b, b)
+    return cells, meta
+
+
+def _stream_eval(env, mk_disp, sp, seeds):
+    reps = []
+    for seed in seeds:
+        reps.append(StreamSim(env, mk_disp(seed), sp, seed=seed).run())
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")     # all-NaN tails at full drop
+        agg = {k: float(np.nanmean([r[k] for r in reps]))
+               for k in ("miss_rate", "sojourn_p50", "sojourn_p99",
+                         "throughput")}
+    agg["completed"] = int(sum(r["completed"] for r in reps))
+    return agg
+
+
+def run(quick=True, smoke=False):
+    frame_iters = 3 if smoke else (30 if quick else 100)
+    tune_iters = 0 if smoke else (14 if quick else 20)
+    dcfg = DistillConfig(
+        iterations=1 if smoke else 3, frames=8 if smoke else 64,
+        n_envs=2 if smoke else 4, label_samples=2 if smoke else 4,
+        epochs=10 if smoke else 150)
+    eval_frames = 16 if smoke else 64
+    eval_envs = 1 if smoke else 4
+    seeds = (7,) if smoke else ((7, 8, 9, 10, 11) if quick
+                                else tuple(range(7, 15)))
+    horizon = 4.0 if smoke else 12.0
+    batches = (1, 1000) if smoke else (1, 10_000)
+    n_timed = 5 if smoke else 20
+
+    # 1. train big: randomized-pool entity teacher, then streaming tune
+    t0 = time.time()
+    teacher, _ = train_mahppo(
+        make_env(randomized=True),
+        MAHPPOConfig(iterations=frame_iters, horizon=512, n_envs=4,
+                     reuse=4, entity_policy=True, randomize_pool=True),
+        seed=0)
+    train_s = time.time() - t0
+    env = make_env()
+    t0 = time.time()
+    if tune_iters:
+        teacher, _ = finetune_streaming(
+            env, teacher,
+            [StreamParams(rate=r, horizon=8.0) for r in TUNE_RATES],
+            StreamTuneConfig(iterations=tune_iters), seed=100)
+    tune_s = time.time() - t0
+
+    # 2. serve small: distill + int8-quantize
+    t0 = time.time()
+    student, hist = distill_entity_policy(env, teacher, dcfg, seed=0)
+    distill_s = time.time() - t0
+    qstudent = quantize_flat_trunk(student)
+
+    # parameter accounting (satellite: the ledger asserts the student is
+    # actually small)
+    t_params = nets.param_count(teacher["entity_actor"])
+    s_params = nets.param_count(student)
+    params = {"teacher": t_params, "student": s_params,
+              "ratio": s_params / t_params,
+              "teacher_bytes": nets.param_bytes(teacher["entity_actor"]),
+              "student_bytes_f32": nets.param_bytes(student),
+              "student_bytes_int8": nets.param_bytes(qstudent)}
+
+    # 3a. end-overhead fidelity on the deployment pool
+    beta = float(env.params.beta)
+    ovh = {}
+    for name, agent in (("teacher", teacher),
+                        ("student_f32", {"flat_trunk": student}),
+                        ("student_int8", {"flat_trunk": qstudent})):
+        ev = evaluate_policy(env, agent, frames=eval_frames, seed=1,
+                             n_envs=eval_envs)
+        ovh[name] = {"t_task": float(ev["t_task"]),
+                     "e_task": float(ev["e_task"]),
+                     "overhead": float(ev["t_task"] + beta * ev["e_task"])}
+    fidelity = {"overheads": ovh,
+                "ratio_f32": ovh["student_f32"]["overhead"]
+                / ovh["teacher"]["overhead"],
+                "ratio_int8": ovh["student_int8"]["overhead"]
+                / ovh["teacher"]["overhead"],
+                "agreement": action_agreement(env, teacher, student,
+                                              states=256, seed=9)}
+
+    # 3b. training-free kernel parity
+    kernel = _kernel_parity(env, qstudent, student)
+
+    # 3c. µs/decision sweep through the shared interleaved harness
+    cells, meta = _latency_cells(env, teacher, student, qstudent, batches)
+    fwd = forward_us(cells, n_timed=n_timed)
+    lat_rows = []
+    for label, stats in fwd.items():
+        cand, b, decisions = meta[label]
+        lat_rows.append({"candidate": cand, "batch": b,
+                         "best_us": stats["best_us"],
+                         "us_per_decision": stats["best_us"] / decisions,
+                         "p50_us": stats["tail"]["p50"],
+                         "p99_us": stats["tail"]["p99"]})
+    by_lat = {(r["candidate"], r["batch"]): r for r in lat_rows}
+    b1 = batches[0]
+    # the DEPLOYED trunk's batch-1 latency win: best of f32/int8 (the
+    # serving artifact is whichever the deployment picks; both are the
+    # distilled trunk)
+    batch1_ratio = min(by_lat[("student_f32", b1)]["best_us"],
+                       by_lat[("student_int8", b1)]["best_us"]) \
+        / by_lat[("teacher", b1)]["best_us"]
+
+    # 3d. the int8 trunk as the live mid-load dispatcher
+    sp = StreamParams(rate=MID_RATE, horizon=horizon)
+    stream = {
+        "trunk": _stream_eval(
+            env, lambda s: TrunkDispatcher(env, qstudent, seed=s), sp,
+            seeds),
+        "nearest": _stream_eval(
+            env, lambda s: NearestServerDispatcher(env), sp, seeds)}
+    eps = 1e-3
+    stream["p99_ratio"] = (stream["trunk"]["sojourn_p99"] + eps) \
+        / (stream["nearest"]["sojourn_p99"] + eps)
+
+    # ledger: training-free gates always; fidelity/latency/QoS gates once
+    # the training budget is real (quick/full)
+    parity = [
+        {"name": "policy_int8_kernel_parity",
+         "ratio": max(kernel["kernel_max_diff"].values()) / KERNEL_TOL,
+         "limit": 1.0},
+        {"name": "policy_student_param_ratio",
+         "ratio": params["ratio"], "limit": 0.25}]
+    if smoke:
+        done = stream["trunk"]["completed"]
+        parity.append({"name": "policy_trunk_completes_tasks",
+                       "ratio": 0.0 if done > 0 else 2.0, "limit": 1.0})
+    else:
+        parity += [
+            {"name": "policy_distill_overhead",
+             "ratio": fidelity["ratio_f32"], "limit": 1.05},
+            {"name": "policy_batch1_speedup",
+             "ratio": batch1_ratio, "limit": 0.5},
+            {"name": "policy_trunk_vs_nearest_p99_mid",
+             "ratio": stream["p99_ratio"], "limit": 1.0}]
+
+    return {"rows": lat_rows, "params": params, "fidelity": fidelity,
+            "kernel": kernel, "stream": stream,
+            "batch1_speedup": batch1_ratio, "batches": list(batches),
+            "train_s": train_s, "tune_s": tune_s, "distill_s": distill_s,
+            "distill_history": hist, "mid_rate": MID_RATE,
+            "parity": parity}
+
+
+if __name__ == "__main__":
+    out = run()
+    for r in out["rows"]:
+        print(f"{r['candidate']:>13s}@{r['batch']:<6d}: "
+              f"{r['best_us']:9.1f}us  "
+              f"{r['us_per_decision']:8.3f}us/decision")
+    print(f"params: student/teacher = {out['params']['ratio']:.3f} "
+          f"({out['params']['student']}/{out['params']['teacher']}), "
+          f"int8 bytes {out['params']['student_bytes_int8']}")
+    print(f"overhead ratios: f32 {out['fidelity']['ratio_f32']:.3f} "
+          f"int8 {out['fidelity']['ratio_int8']:.3f}")
+    print(f"stream p99 trunk/nearest: {out['stream']['p99_ratio']:.3f}")
+    for p in out["parity"]:
+        flag = "OK" if p["ratio"] <= p["limit"] else "FAIL"
+        print(f"{p['name']}: {p['ratio']:.3f} (limit {p['limit']}) {flag}")

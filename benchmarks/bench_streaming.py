@@ -52,9 +52,9 @@ from repro.stream.adapter import (EntityDispatcher, GreedyDispatcher,
 from repro.stream.events import StreamParams, StreamSim
 
 try:
-    from benchmarks._timing import tail_stats
+    from benchmarks._timing import forward_us, tail_stats
 except ImportError:                 # run directly as a script
-    from _timing import tail_stats
+    from _timing import forward_us, tail_stats
 
 N_UE = 8
 N_SERVERS = 2
@@ -186,12 +186,27 @@ def run(quick=True, smoke=False):
         parity.append({"name": "streaming_entity_completes_tasks",
                        "ratio": 0.0 if done > 0 else 2.0, "limit": 1.0})
 
+    # the tuned dispatcher's jitted policy forward on one live-state
+    # snapshot, through the SAME interleaved best-of-k harness
+    # bench_policy_latency sweeps (the live `dispatch_us` tails above add
+    # bridge + host overhead on top of this)
+    import jax
+    from repro.stream.adapter import stream_env_state
+    from repro.stream.events import StreamCore
+    ent = dispatchers["entity"](0)
+    s0 = stream_env_state(StreamCore(env, StreamParams(), seed=0))
+    k0 = jax.random.PRNGKey(0)
+    fwd = forward_us(
+        {"entity@1": lambda: ent._act(ent.agent, s0, k0)},
+        n_timed=5 if smoke else 20)
+
     return {"rows": rows, "train_s": train_s, "tune_s": tune_s,
             "tune_history": tune_hist,
             "mid_rate": MID_RATE, "sat_rate": SAT_RATE,
             "eval_seeds": len(seeds), "horizon": horizon,
             "entity_dispatch_us":
                 by[(MID_RATE, "entity")].get("dispatch_us"),
+            "policy_forward_us": fwd["entity@1"],
             "parity": parity}
 
 

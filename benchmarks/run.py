@@ -11,8 +11,15 @@ runs the RL sections at tiny iteration counts (CI-sized) and still emits
 the standardized ``artifacts/BENCH_multi_server.json``,
 ``artifacts/BENCH_generalization.json``, ``artifacts/BENCH_entity.json``,
 ``artifacts/BENCH_ue_scaling.json``, ``artifacts/BENCH_streaming.json``,
-``artifacts/BENCH_compression.json`` and
-``artifacts/BENCH_llm_offload.json`` artifacts. The ue_scaling ledger enforces the giant-fleet story: per-UE
+``artifacts/BENCH_compression.json``,
+``artifacts/BENCH_llm_offload.json`` and
+``artifacts/BENCH_policy_latency.json`` artifacts. The policy_latency
+ledger enforces the train-big/serve-small story: the distilled trunk
+within 5% of its entity teacher's mean overhead on the deployment pool,
+distilled batch-1 forward at most 0.5x the teacher's µs, int8 fused
+kernel parity vs the ``kernels/ref.py`` oracle, the trunk dispatcher
+p99 at most nearest-server's at mid-load streaming, and student params
+at most 25% of the teacher's (parity/params gated in smoke too). The ue_scaling ledger enforces the giant-fleet story: per-UE
 jitted iteration cost at N=256 at most 0.5x the N=16 per-UE cost, and
 the fused pair-scorer kernel beating its naive reference on call_us at
 N>=256 while matching it numerically. The generalization ledger also
@@ -419,6 +426,9 @@ def main() -> None:
         if lat:
             _emit("streaming_entity_dispatch_us", lat["p50"],
                   f"p95={lat['p95']:.0f};p99={lat['p99']:.0f}")
+        fwd = out["policy_forward_us"]
+        _emit("streaming_policy_forward_us", fwd["best_us"],
+              f"mean={fwd['mean_us']:.1f};p99={fwd['tail']['p99']:.1f}")
         _emit("streaming_train_s", out["train_s"] * 1e6,
               f"tune_s={out['tune_s']:.1f};"
               f"tune_final_miss={out['tune_history'][-1]['miss_rate']:.3f}")
@@ -431,12 +441,62 @@ def main() -> None:
                     "mid_rate": out["mid_rate"],
                     "sat_rate": out["sat_rate"],
                     "entity_dispatch_us": out["entity_dispatch_us"],
+                    "policy_forward_us": out["policy_forward_us"],
                     "train_s": out["train_s"], "tune_s": out["tune_s"],
                     "tune_history": out["tune_history"],
                     "parity": out["parity"]}
         with open("artifacts/BENCH_streaming.json", "w") as f:
             json.dump(artifact, f, indent=1, default=float)
         print("# wrote artifacts/BENCH_streaming.json", flush=True)
+
+    if want("policy_latency"):
+        _section("policy latency (train big, serve small: distilled + "
+                 "int8 trunk)")
+        from benchmarks import bench_policy_latency
+        out = bench_policy_latency.run(quick=quick, smoke=smoke)
+        results["policy_latency"] = out
+        for r in out["rows"]:
+            _emit(f"policy_latency_{r['candidate']}_b{r['batch']}",
+                  r["best_us"],
+                  f"us_per_decision={r['us_per_decision']:.3f};"
+                  f"p50={r['p50_us']:.1f};p99={r['p99_us']:.1f}")
+        p = out["params"]
+        _emit("policy_latency_params", 0.0,
+              f"teacher={p['teacher']};student={p['student']};"
+              f"ratio={p['ratio']:.3f};"
+              f"bytes_f32={p['student_bytes_f32']};"
+              f"bytes_int8={p['student_bytes_int8']}")
+        fid = out["fidelity"]
+        _emit("policy_latency_fidelity", 0.0,
+              f"ratio_f32={fid['ratio_f32']:.3f};"
+              f"ratio_int8={fid['ratio_int8']:.3f};"
+              f"mode_agree={fid['agreement']['all']:.3f}")
+        ker = out["kernel"]
+        _emit("policy_latency_int8_kernel", 0.0,
+              f"max_diff_xla={ker['kernel_max_diff']['xla']:.2e};"
+              f"max_diff_pallas={ker['kernel_max_diff']['pallas']:.2e};"
+              f"int8_vs_f32_agree={ker['int8_vs_f32_mode_agree']:.4f}")
+        _emit("policy_latency_stream_mid", 0.0,
+              f"trunk_p99={out['stream']['trunk']['sojourn_p99']:.3f};"
+              f"nearest_p99={out['stream']['nearest']['sojourn_p99']:.3f};"
+              f"ratio={out['stream']['p99_ratio']:.3f}")
+        for pc in out["parity"]:
+            guard("policy_latency", pc["name"], pc["ratio"], pc["limit"])
+        os.makedirs("artifacts", exist_ok=True)
+        artifact = {"bench": "policy_latency", "schema": 1,
+                    "smoke": smoke, "quick": quick,
+                    "rows": out["rows"], "params": out["params"],
+                    "fidelity": out["fidelity"], "kernel": out["kernel"],
+                    "stream": out["stream"],
+                    "batch1_speedup": out["batch1_speedup"],
+                    "batches": out["batches"],
+                    "train_s": out["train_s"], "tune_s": out["tune_s"],
+                    "distill_s": out["distill_s"],
+                    "distill_history": out["distill_history"],
+                    "parity": out["parity"]}
+        with open("artifacts/BENCH_policy_latency.json", "w") as f:
+            json.dump(artifact, f, indent=1, default=float)
+        print("# wrote artifacts/BENCH_policy_latency.json", flush=True)
 
     if want("archs"):
         _section("fig13 other backbones (+ assigned archs)")

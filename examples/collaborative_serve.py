@@ -55,6 +55,16 @@ context-length-dependent shift (short rungs offload, the long rung
 stays local) has emerged:
 
   PYTHONPATH=src python examples/collaborative_serve.py --llm
+
+With ``--distill`` the demo closes the train-big/serve-small loop: the
+trained entity teacher is distilled into a small flat-trunk student on
+the STATIC deployment pool (``rl.distill`` — one fused MLP pass over
+``observe_per_ue`` rows emits every action head), the student is int8
+weight-quantized for the fused dequant-matmul kernel, and the demo
+finishes with a batch-1 dispatch-latency readout (teacher vs distilled
+f32 vs int8):
+
+  PYTHONPATH=src python examples/collaborative_serve.py --distill
 """
 import argparse
 
@@ -112,7 +122,7 @@ def run_split_forward(params, cfg, tokens, split_layer, ae, bits=8):
 def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
                    leave_rate=0.0, n_servers=1, shared_policy=False,
                    entity_policy=False, n_ue=4, fused_scorer=False,
-                   n_shards=1, llm=False):
+                   n_shards=1, llm=False, distill=False):
     """Mixed-fleet scheduling: per-UE split tables + device tiers end-to-end
     through MAHPPO, vs the non-coordinating greedy heuristic. With nonzero
     churn/leave rates the fleet is DYNAMIC: UEs join from a standby pool and
@@ -306,6 +316,69 @@ def run_fleet_demo(arch: str, iterations: int, churn_rate=0.0,
               f"nearest-server {near_big['overhead']:.4f} "
               f"[{'BEATS' if ovh_big <= near_big['overhead'] else 'LOSES'}]")
 
+    if distill:
+        # train big, serve small: the entity teacher generalizes across
+        # fleets/pools; the deployment serves ONE pool, where a distilled
+        # flat trunk prices a dispatch in microseconds
+        import time
+
+        from repro.rl.distill import (DistillConfig, distill_entity_policy,
+                                      quantize_flat_trunk)
+        env_d = env if not randomize else MECEnv(make_env_params(
+            fleet, n_channels=2, t0=t0, pool=pool))   # the STATIC pool
+        print("\ndistilling into the serve-small flat trunk "
+              "(rl.distill; fixed fleet, fixed pool)...")
+        student, _ = distill_entity_policy(
+            env_d, agent, DistillConfig(iterations=2, frames=48, epochs=120),
+            seed=1, log_cb=lambda r: print(
+                f"  round {r['iteration']}: dataset {r['states']} states  "
+                f"loss {r['loss']:.4f}  mode agreement {r['agreement']:.2f}"))
+        qstudent = quantize_flat_trunk(student)
+        n_t, n_s = (nets.param_count(agent["entity_actor"]),
+                    nets.param_count(student))
+        print(f"  teacher {n_t} params "
+              f"({nets.param_bytes(agent['entity_actor']) / 1e3:.1f} kB) -> "
+              f"student {n_s} ({100 * n_s / n_t:.1f}%); int8 serving "
+              f"weights {nets.param_bytes(qstudent) / 1e3:.1f} kB vs "
+              f"f32 {nets.param_bytes(student) / 1e3:.1f} kB")
+        ev_t = evaluate_policy(env_d, agent, frames=64)
+        ev_q = evaluate_policy(env_d, {"flat_trunk": qstudent}, frames=64)
+        ovh_t = ev_t["t_task"] + beta * ev_t["e_task"]
+        ovh_q = ev_q["t_task"] + beta * ev_q["e_task"]
+        print(f"  int8 student overhead {ovh_q:.4f} vs teacher {ovh_t:.4f} "
+              f"(ratio {ovh_q / ovh_t:.2f})")
+
+        # the closing readout: one batch-1 policy forward — the per-task
+        # cost the dispatcher pays on the streaming hot path (the full
+        # batch sweep lives in benchmarks/bench_policy_latency.py)
+        space_d = env_d.action_space
+        s0 = env_d.reset(jax.random.PRNGKey(0), eval_mode=True)
+        masks_d = space_d.broadcast_masks(env_d.action_masks(),
+                                          env_d.params.n_ue)
+        rows = env_d.observe_per_ue(s0)
+        ents = env_d.observe_entities(s0)
+        cells = (
+            ("entity teacher", jax.jit(lambda: nets.entity_actor_forward(
+                agent["entity_actor"], space_d, ents, masks_d))),
+            ("distilled f32", jax.jit(lambda: nets.flat_trunk_forward(
+                student, space_d, rows, masks_d))),
+            ("distilled int8", jax.jit(lambda: nets.flat_trunk_forward(
+                qstudent, space_d, rows, masks_d))),
+        )
+
+        def best_us(fn, k=20):
+            jax.block_until_ready(fn())             # compile + warm
+            best = float("inf")
+            for _ in range(k):
+                t1 = time.perf_counter()
+                jax.block_until_ready(fn())
+                best = min(best, time.perf_counter() - t1)
+            return best * 1e6
+
+        print("  batch-1 dispatch forward (best of 20):")
+        for name, fn in cells:
+            print(f"    {name:14s}: {best_us(fn):8.1f} us")
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -356,6 +429,13 @@ def main():
                          "UE per context rung; KV cache rides the "
                          "boundary payload) on the bench_llm_offload "
                          "pool — implies --entity-policy")
+    ap.add_argument("--distill", action="store_true",
+                    help="after training, distill the entity teacher into "
+                         "the serve-small flat trunk (rl.distill), int8-"
+                         "quantize it for the fused dequant-matmul kernel, "
+                         "and close with a batch-1 dispatch-latency "
+                         "readout (implies --entity-policy; needs a "
+                         "static fleet, so excludes --churn)")
     ap.add_argument("--n-shards", type=int, default=1, metavar="K",
                     help="shard rollout collection over K devices (on "
                          "CPU set XLA_FLAGS=--xla_force_host_platform_"
@@ -372,10 +452,15 @@ def main():
         args.entity_policy = True
     if args.llm:
         args.entity_policy = True   # the scenario is about routing
+    if args.distill:
+        args.entity_policy = True   # distillation needs an entity teacher
     if args.entity_policy and args.servers < 2:
         args.servers = 2       # the route scorer needs a pool to score
     churn = (args.churn or args.churn_rate is not None
              or args.leave_rate is not None)
+    if args.distill and churn:
+        ap.error("--distill targets a fixed deployment fleet; it cannot "
+                 "combine with --churn")
     if args.fleet or churn or args.servers > 1 or args.shared_policy \
             or args.entity_policy or args.n_ue != 4 or args.n_shards > 1 \
             or args.llm:
@@ -388,7 +473,7 @@ def main():
             n_servers=args.servers, shared_policy=args.shared_policy,
             entity_policy=args.entity_policy, n_ue=args.n_ue,
             fused_scorer=args.fused_scorer, n_shards=args.n_shards,
-            llm=args.llm)
+            llm=args.llm, distill=args.distill)
         return
 
     cfg = reduced(get_config(args.arch), n_layers=4)

@@ -36,6 +36,29 @@ def _tiles(shape, bm, bn):
     return (pl.cdiv(m, bm), pl.cdiv(n, bn))
 
 
+def quantize_xla(x, mn, mx, *, bits=8):
+    """Decomposed-XLA quantize — the kernel's elementwise math in plain
+    jnp, the fast path on CPU/GPU hosts (interpret-mode Pallas is for
+    parity testing, not speed). Op-for-op identical to ``_quant_kernel``
+    so the produced codes are bitwise-equal across impls."""
+    levels = float((1 << bits) - 1)
+    mn = jnp.asarray(mn, jnp.float32)
+    mx = jnp.asarray(mx, jnp.float32)
+    scale = levels / jnp.maximum(mx - mn, 1e-12)
+    y = jnp.clip(jnp.round((x.astype(jnp.float32) - mn) * scale),
+                 0.0, levels)
+    return y.astype(jnp.uint8 if bits <= 8 else jnp.uint16)
+
+
+def dequantize_xla(y, mn, mx, *, bits=8, out_dtype=jnp.float32):
+    """Decomposed-XLA dequantize, bitwise-equal to ``_dequant_kernel``."""
+    levels = float((1 << bits) - 1)
+    mn = jnp.asarray(mn, jnp.float32)
+    mx = jnp.asarray(mx, jnp.float32)
+    out = y.astype(jnp.float32) * ((mx - mn) / levels) + mn
+    return out.astype(out_dtype)
+
+
 def quantize_2d(x, mn, mx, *, bits=8, block=(256, 512), interpret=True):
     """x: (M, N) float; mn/mx: () scalars. Returns uint8/16 codes (M, N)."""
     m, n = x.shape

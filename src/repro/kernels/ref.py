@@ -19,6 +19,21 @@ def dequantize_ref(y, mn, mx, bits=8):
     return y.astype(jnp.float32) * (mx - mn) / levels + mn
 
 
+def flat_trunk_ref(x, codes, mns, mxs, bs, bits=8):
+    """Naive oracle for the fused int8 dequant-matmul dispatch trunk
+    (``kernels/flat_trunk.py``): dequantize every weight matrix to f32
+    via ``dequantize_ref`` (paper Eq. 2), then run the plain tanh MLP
+    (linear last layer) — each full-precision W materializes in HBM."""
+    h = x.astype(jnp.float32)
+    for i in range(len(codes)):
+        w = dequantize_ref(codes[i], jnp.float32(mns[i]),
+                           jnp.float32(mxs[i]), bits)
+        h = h @ w + jnp.asarray(bs[i], jnp.float32)
+        if i < len(codes) - 1:
+            h = jnp.tanh(h)
+    return h
+
+
 def bottleneck_encode_ref(x, w, mn, mx, bits=8):
     """Fused compressor encode: (T, d) @ (d, d') then quantize."""
     z = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))

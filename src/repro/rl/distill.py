@@ -1,0 +1,247 @@
+"""Train-big/serve-small: distill the entity policy into a flat trunk.
+
+At production scale the scheduler is itself a serving workload: the
+policy prices a dispatch decision for every task arrival, so its own
+forward latency sits on the hot path of every Eq. 7/8 service. The
+entity policy earns its cost at TRAINING time — permutation-equivariant
+pair scoring is what generalizes across fleets and randomized pools —
+but a deployment serves ONE pool, where that generality is pure
+overhead. This module converts the trained teacher into a deployment
+student: a small flat MLP (``nets.init_flat_trunk``) over
+``observe_per_ue``'s constant-width rows that emits every action head in
+one fused pass, optionally int8 weight-quantized for the fused
+dequant-matmul serving kernel (``kernels/flat_trunk.py``).
+
+The distillation is the same DAgger-style machinery as
+``rl.streaming``: roll out episodes (round 0 under the sampled teacher,
+later rounds under the sampled *student* so training visits the states
+the student will actually induce), label every visited state with
+actions SAMPLED from the teacher's distribution (``label_samples`` draws
+per state — a Monte-Carlo cross-entropy whose minimizer is the teacher's
+per-state distribution, i.e. KL matching through the space's generic
+``log_prob`` path, continuous heads included), aggregate the dataset
+across rounds, and fit with full-batch adamw epochs. On states whose
+per-UE rows alias teacher-distinguishable entity views the student
+learns the label marginals — exactly the property the sampling
+deployment mode (``TrunkDispatcher``) turns into load spreading.
+
+Fixed-fleet, fixed-pool by design: the student trades the teacher's
+any-N/any-E transfer for microsecond batch-1 latency on the deployment
+pool (the route head is a fixed-width slice). Distill against the env
+you will serve.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.env.mecenv import MECEnv
+from repro.optim import adamw_init, adamw_update
+from repro.rl import nets
+
+
+@dataclasses.dataclass(frozen=True)
+class DistillConfig:
+    """``iterations`` DAgger rounds of ``n_envs`` x ``frames`` rollout
+    states each; every round refits on the aggregated dataset for
+    ``epochs`` full-batch adamw steps. ``label_samples`` teacher draws
+    per state set the Monte-Carlo resolution of the KL match."""
+    iterations: int = 3
+    frames: int = 64
+    n_envs: int = 4
+    label_samples: int = 4
+    epochs: int = 80
+    lr: float = 3e-3
+    hidden: tuple = (64, 64)
+
+
+def _const_masks(env: MECEnv):
+    """The complete per-actor mask dict of a STATIC fleet (state-
+    independent, so the training set need not store per-state masks)."""
+    if env.dynamic:
+        raise ValueError("distillation targets a fixed deployment fleet; "
+                         "dynamic-churn envs have state-dependent masks")
+    s0 = env.reset(jax.random.PRNGKey(0))
+    return env.action_space.broadcast_masks(env.action_masks(s0),
+                                            env.params.n_ue)
+
+
+def _make_collect(env: MECEnv, teacher, cfg: DistillConfig, *,
+                  use_student: bool):
+    """jit(vmap(episode)): (keys (E,), student) -> (rows (E, T, N, F),
+    labels {head: (E, T, S, N)}) — per-UE feature rows of every visited
+    state plus ``label_samples`` teacher action draws for each."""
+    space = env.action_space
+    n_ue = env.params.n_ue
+    t_actor = teacher["entity_actor"]
+
+    def episode(key, student):
+        kr, ks = jax.random.split(key)
+        s = env.reset(kr)
+
+        def body(carry, sub):
+            s = carry
+            masks = space.broadcast_masks(env.action_masks(s), n_ue)
+            tdist = nets.entity_actor_forward(t_actor, space,
+                                              env.observe_entities(s),
+                                              masks)
+            k_lab, k_act = jax.random.split(sub)
+            lab_keys = jax.vmap(lambda k: jax.random.split(k, n_ue))(
+                jax.random.split(k_lab, cfg.label_samples))
+            labels = jax.vmap(
+                lambda kk: jax.vmap(space.sample)(kk, tdist, masks))(
+                    lab_keys)
+            if use_student:
+                bdist = nets.flat_trunk_forward(
+                    student, space, env.observe_per_ue(s), masks)
+            else:
+                bdist = tdist
+            raw = jax.vmap(space.sample)(jax.random.split(k_act, n_ue),
+                                         bdist, masks)
+            s2, _, _, _ = env.step(s, space.execute(raw))
+            return s2, (env.observe_per_ue(s), labels)
+
+        _, out = jax.lax.scan(body, s, jax.random.split(ks, cfg.frames))
+        return out
+
+    return jax.jit(jax.vmap(episode, in_axes=(0, None)))
+
+
+def distill_entity_policy(env: MECEnv, teacher, cfg: DistillConfig = None,
+                          *, seed=0, log_cb=None):
+    """Distill an entity ``teacher`` ({"entity_actor": ...}) into a flat
+    trunk student on the deployment ``env``. Returns (student params for
+    ``nets.flat_trunk_forward``, history); each history row reports the
+    round's final distillation loss (mean negative label log-prob) and
+    the student-vs-teacher mode agreement on that round's fresh states."""
+    if "entity_actor" not in teacher:
+        raise ValueError("distillation needs an entity teacher "
+                         "({'entity_actor': ...}); train with "
+                         "MAHPPOConfig(entity_policy=True)")
+    cfg = cfg or DistillConfig()
+    space = env.action_space
+    masks0 = _const_masks(env)
+    key = jax.random.PRNGKey(seed)
+    key, k_init = jax.random.split(key)
+    obs_dim = int(env.observe_per_ue(env.reset(k_init)).shape[-1])
+    student = nets.init_flat_trunk(k_init, obs_dim, space,
+                                   hidden=cfg.hidden)
+
+    collect_t = _make_collect(env, teacher, cfg, use_student=False)
+    collect_s = _make_collect(env, teacher, cfg, use_student=True)
+
+    def loss_fn(p, rows, labels):
+        # rows: (M, N, F); labels: {head: (M, S, N)}
+        def one(r, lab):
+            dist = nets.flat_trunk_forward(p, space, r, masks0)
+            lp = jax.vmap(
+                lambda l: jax.vmap(space.log_prob)(dist, l))(lab)
+            return lp.mean()
+
+        return -jax.vmap(one)(rows, labels).mean()
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    opt = adamw_init(student)
+    rows_all, labels_all = None, None
+    history = []
+    for it in range(cfg.iterations):
+        key, k_roll = jax.random.split(key)
+        collect = collect_t if it == 0 else collect_s
+        rows, labels = collect(jax.random.split(k_roll, cfg.n_envs),
+                               student)
+        flat = lambda x: x.reshape((-1,) + x.shape[2:])
+        rows = flat(rows)                       # (E*T, N, F)
+        labels = jax.tree.map(flat, labels)     # {h: (E*T, S, N)}
+        if rows_all is None:
+            rows_all, labels_all = rows, labels
+        else:
+            rows_all = jnp.concatenate([rows_all, rows])
+            labels_all = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b]), labels_all, labels)
+        loss = np.inf
+        for _ in range(cfg.epochs):
+            loss, g = grad_fn(student, rows_all, labels_all)
+            student, opt = adamw_update(g, opt, student, cfg.lr,
+                                        weight_decay=0.0)
+        agree = action_agreement(env, teacher, student,
+                                 states=min(128, rows.shape[0]),
+                                 seed=seed + 1000 + it)
+        row = {"iteration": it, "states": int(rows_all.shape[0]),
+               "loss": float(loss), "agreement": agree["all"]}
+        history.append(row)
+        if log_cb:
+            log_cb(row)
+    return student, history
+
+
+def action_agreement(env: MECEnv, teacher, student, *, states=256,
+                     seed=0):
+    """Deterministic-mode agreement between teacher and student on
+    held-out states visited under the SAMPLED teacher: per-discrete-head
+    match fractions over (state, UE) slots, their conjunction ("all"),
+    and the mean absolute squashed-power gap ("power_gap")."""
+    space = env.action_space
+    n_ue = env.params.n_ue
+    t_actor = teacher["entity_actor"]
+    frames = (states + n_ue - 1) // max(n_ue, 1)
+
+    def rollout(key):
+        s = env.reset(key)
+
+        def body(carry, sub):
+            s = carry
+            masks = space.broadcast_masks(env.action_masks(s), n_ue)
+            tdist = nets.entity_actor_forward(t_actor, space,
+                                              env.observe_entities(s),
+                                              masks)
+            sdist = nets.flat_trunk_forward(student, space,
+                                            env.observe_per_ue(s), masks)
+            t_raw = jax.vmap(space.mode)(tdist, masks)
+            s_raw = jax.vmap(space.mode)(sdist, masks)
+            raw = jax.vmap(space.sample)(jax.random.split(sub, n_ue),
+                                         tdist, masks)
+            s2, _, _, _ = env.step(s, space.execute(raw))
+            t_phys, s_phys = space.execute(t_raw), space.execute(s_raw)
+            match = {h.name: t_raw[h.name] == s_raw[h.name]
+                     for h in space.discrete}
+            gaps = [jnp.abs(t_phys[h.name] - s_phys[h.name])
+                    for h in space.continuous]
+            return s2, (match, sum(gaps))
+
+        _, (match, gap) = jax.lax.scan(body, s,
+                                       jax.random.split(key, frames))
+        return match, gap
+
+    match, gap = jax.jit(rollout)(jax.random.PRNGKey(seed))
+    out = {h.name: float(jnp.mean(match[h.name]))
+           for h in space.discrete}
+    both = None
+    for h in space.discrete:
+        both = match[h.name] if both is None else both & match[h.name]
+    out["all"] = float(jnp.mean(both))
+    out["power_gap"] = float(jnp.mean(gap))
+    return out
+
+
+def quantize_flat_trunk(p, bits=8):
+    """Per-layer min-max int8 weight quantization of the f32 student
+    (paper Eq. 1 applied to WEIGHTS: one (mn, mx) calibration pair per
+    layer, via the same ``kernels.ops.quantize`` codes the feature
+    compressor uses). Biases stay f32 — they are O(width) against the
+    weights' O(width^2). The result feeds ``nets.flat_trunk_forward``
+    (which routes through the fused dequant-matmul kernel) and
+    ``stream.adapter.TrunkDispatcher``; ``bits`` rides along as static
+    bookkeeping."""
+    from repro.kernels import ops as kops
+    qlayers = []
+    for layer in p["layers"]:
+        w = layer["w"]
+        mn = jnp.asarray(jnp.min(w), jnp.float32)
+        mx = jnp.asarray(jnp.max(w), jnp.float32)
+        qlayers.append({"codes": kops.quantize(w, mn, mx, bits=bits),
+                        "mn": mn, "mx": mx,
+                        "b": jnp.asarray(layer["b"], jnp.float32)})
+    return {"qlayers": qlayers, "bits": int(bits)}

@@ -433,6 +433,10 @@ def evaluate_policy(env: MECEnv, agent, *, frames=64, seed=0,
     n_ue = env.params.n_ue
     shared = "actor" in agent
     entity = "entity_actor" in agent
+    # a distilled deployment trunk ({"flat_trunk": ...}, f32 or int8 —
+    # see rl/distill.py) evaluates on the same observe_per_ue rows as the
+    # shared policy, through one fused MLP pass
+    trunk = "flat_trunk" in agent
     if fused_scorer and not entity:
         raise ValueError("fused_scorer needs an entity agent")
     obs_entities = env.observe_entities_raw if fused_scorer \
@@ -448,6 +452,11 @@ def evaluate_policy(env: MECEnv, agent, *, frames=64, seed=0,
                 masks = space.broadcast_masks(masks, n_ue)
                 dist = nets.entity_actor_forward(
                     agent["entity_actor"], space, obs_entities(s), masks)
+            elif trunk:
+                masks = space.broadcast_masks(masks, n_ue)
+                dist = nets.flat_trunk_forward(
+                    agent["flat_trunk"], space, env.observe_per_ue(s),
+                    masks)
             elif shared:
                 masks = space.broadcast_masks(masks, n_ue)
                 dist = nets.shared_actor_forward(

@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.rl.actionspace import HybridActionSpace
+from repro.rl.actionspace import (LOG_STD_MAX, LOG_STD_MIN,
+                                  HybridActionSpace, _mask_logits)
 
 
 def _linear_init(key, nin, nout, scale=np.sqrt(2.0)):
@@ -193,12 +194,87 @@ def entity_policy_value(actor_p, head_p, space, obs, masks):
     return dist, _mlp(head_p, hv)[..., 0]
 
 
+# ------------------------------------------------ distilled flat trunk
+# The serve-small deployment net (ROADMAP item 5): the entity teacher is
+# distilled (rl/distill.py) into ONE small MLP over observe_per_ue's
+# constant-width rows that emits every HybridActionSpace head in a
+# single fused pass — no per-head branches, no per-pair scorer, no
+# attention pooling. The output row is the concatenation of all discrete
+# head logits (declaration order) followed by (mu, raw_log_std) pairs
+# for the continuous heads; `trunk_head_dist` splits it into the exact
+# distribution pytree `space.forward` produces, so sample / mode /
+# log_prob / execute are shared with every other policy mode. The route
+# head is a FIXED-width slice here: the student trades the teacher's
+# any-E generality for microsecond batch-1 latency on one deployment
+# pool (the train-big/serve-small contract).
+
+def trunk_width(space: HybridActionSpace) -> int:
+    """Output columns of the flat trunk: one logit per discrete choice
+    plus (mu, log_std) per continuous head."""
+    return sum(h.n for h in space.discrete) + 2 * len(space.continuous)
+
+
+def init_flat_trunk(key, obs_dim, space: HybridActionSpace,
+                    hidden=(64, 64)):
+    """The distillation student: a plain tanh MLP
+    (obs_dim, *hidden, trunk_width). ~2 orders of magnitude fewer
+    parameters than the entity teacher it is distilled from."""
+    return {"layers": _mlp_init(key, (obs_dim, *hidden,
+                                      trunk_width(space)))}
+
+
+def trunk_head_dist(space: HybridActionSpace, out, masks=None):
+    """Split the trunk's (N, W) output columns into the standard
+    distribution pytree (masked logits per discrete head, clipped
+    {"mu", "log_std"} per continuous head — identical post-processing to
+    `HybridActionSpace.forward`, shared by the f32 and int8 paths)."""
+    dist = {}
+    i = 0
+    for h in space.discrete:
+        logits = out[..., i:i + h.n]
+        i += h.n
+        m = None if masks is None else masks.get(h.name)
+        dist[h.name] = _mask_logits(logits, m)
+    for h in space.continuous:
+        dist[h.name] = {"mu": out[..., i],
+                        "log_std": jnp.clip(out[..., i + 1], LOG_STD_MIN,
+                                            LOG_STD_MAX)}
+        i += 2
+    return dist
+
+
+def flat_trunk_forward(p, space: HybridActionSpace, feats, masks=None):
+    """feats: (N, F) per-UE rows (``env.observe_per_ue``); masks: complete
+    per-actor dict with (N, n) leaves. Returns the same leading-actor-axis
+    distribution pytree as `shared_actor_forward`, from ONE batched MLP
+    pass over the rows (no vmap, no per-head branch dispatch).
+
+    Accepts either the f32 student ({"layers": ...}) or its int8
+    weight-quantized form ({"qlayers": ..., "bits": n}, from
+    ``rl.distill.quantize_flat_trunk``) — the latter routes through the
+    fused dequant-matmul kernel (``kernels.ops.flat_trunk``)."""
+    if "qlayers" in p:
+        from repro.kernels import ops as _kops
+        out = _kops.flat_trunk(feats, p["qlayers"], bits=int(p["bits"]))
+    else:
+        out = _mlp(p["layers"], feats)
+    return trunk_head_dist(space, out, masks)
+
+
 def param_count(tree) -> int:
     """Total parameter count of an agent/actor pytree. The shared-policy
     actor is O(1) in the fleet size; per-UE actors are O(N) — the
     generalization benchmark reports both."""
-    return sum(int(np.prod(x.shape))
+    return sum(int(np.prod(np.shape(x)))
                for x in jax.tree_util.tree_leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    """Serving-weight footprint in bytes, from the ACTUAL leaf dtypes —
+    an int8-quantized trunk counts 1 byte per weight code (plus its f32
+    biases and per-layer calibration scalars), the f32 nets 4."""
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+               for a in map(np.asarray, jax.tree_util.tree_leaves(tree)))
 
 
 def init_critic(key, obs_dim):

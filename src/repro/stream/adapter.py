@@ -104,6 +104,60 @@ class EntityDispatcher:
         return act
 
 
+class TrunkDispatcher:
+    """The distilled (optionally int8-quantized) flat trunk as the live
+    dispatcher — the serve-small deployment endpoint of ``rl/distill.py``.
+
+    Same bridge as :class:`EntityDispatcher` (EnvState snapshot ->
+    policy forward -> masked mode/sample -> execute, deciding UE's
+    slice), but the policy forward is ONE fused MLP pass over
+    ``observe_per_ue`` rows — no entity encoders, no pair scorer — and a
+    quantized trunk ({"qlayers": ..., "bits": n}) routes through the
+    fused int8 dequant-matmul kernel (``kernels.ops.flat_trunk``).
+    Defaults are the deployment mode the teacher was streaming-tuned
+    under: SAMPLED actions (the student learns the teacher's
+    load-spreading marginals on occupancy-aliased states; sampling
+    realizes them) plus the ``least_loaded_channel`` dispatch-time
+    override every baseline also takes. The trunk is closed over, not
+    passed per call: deployment weights are frozen constants, and the
+    quantized form's static ``bits`` must not become a tracer."""
+
+    def __init__(self, env: MECEnv, trunk, *, deterministic=False, seed=0,
+                 live_channel=True):
+        if "layers" not in trunk and "qlayers" not in trunk:
+            raise ValueError("TrunkDispatcher needs flat-trunk params "
+                             "(rl.distill.distill_entity_policy) or their "
+                             "quantized form (quantize_flat_trunk)")
+        self.env = env
+        self.live_channel = live_channel
+        self.b_local = env.n_actions_b - 1
+        self._key = jax.random.PRNGKey(seed)
+        space = env.action_space
+        n_ue = env.params.n_ue
+
+        def act(s, key):
+            masks = space.broadcast_masks(env.action_masks(s), n_ue)
+            dist = nets.flat_trunk_forward(trunk, space,
+                                           env.observe_per_ue(s), masks)
+            if deterministic:
+                raw = jax.vmap(space.mode)(dist, masks)
+            else:
+                raw = jax.vmap(space.sample)(jax.random.split(key, n_ue),
+                                             dist, masks)
+            return space.execute(raw)
+
+        self._act = jax.jit(act)
+
+    def __call__(self, core, ue):
+        s = stream_env_state(core)
+        self._key, k = jax.random.split(self._key)
+        phys = self._act(s, k)
+        act = {name: np.asarray(v)[ue].item() for name, v in phys.items()}
+        if self.live_channel and act["split"] < self.b_local:
+            act["channel"] = least_loaded_channel(core, act.get("route", 0))
+        return act
+
+
 def least_loaded_channel(core, server):
     """The channel of ``server`` with the fewest in-service transmitters
     right now (first minimum — deterministic)."""

@@ -188,3 +188,112 @@ def test_pair_scorer_unknown_impl_raises():
     args = _pair_scorer_inputs(jax.random.PRNGKey(0), 4, 2)
     with pytest.raises(ValueError, match="impl"):
         ops.pair_scorer(*args, impl="cuda")
+
+
+# --------------------------------------------- quant impl routing (PR 10)
+# quantize/dequantize grew the same dual-impl REPRO_*_IMPL convention as
+# pair_scorer: decomposed XLA off-TPU, the Pallas kernel on TPU, env-var
+# override. The two impls share the exact elementwise math, so codes must
+# be BITWISE equal, not merely close.
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_quantize_impls_bitwise_equal(bits):
+    x = jax.random.normal(jax.random.PRNGKey(12), (37, 130)) * 4
+    qx = ops.quantize(x, -9.0, 9.0, bits=bits, impl="xla")
+    qp = ops.quantize(x, -9.0, 9.0, bits=bits, impl="pallas",
+                      interpret=True)
+    np.testing.assert_array_equal(np.asarray(qx), np.asarray(qp))
+    dx = ops.dequantize(qx, -9.0, 9.0, bits=bits, impl="xla")
+    dp = ops.dequantize(qx, -9.0, 9.0, bits=bits, impl="pallas",
+                        interpret=True)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dp),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_quant_impl_env_var(monkeypatch):
+    """REPRO_QUANT_IMPL selects the path; an unknown value is an error,
+    not a silent fallback. An explicit ``interpret=`` implies Pallas (the
+    pre-routing call signature keeps its meaning)."""
+    x = jax.random.normal(jax.random.PRNGKey(13), (8, 64))
+    monkeypatch.setenv("REPRO_QUANT_IMPL", "xla")
+    q_env = ops.quantize(x, -4.0, 4.0)
+    np.testing.assert_array_equal(
+        np.asarray(q_env), np.asarray(ops.quantize(x, -4.0, 4.0, impl="xla")))
+    monkeypatch.setenv("REPRO_QUANT_IMPL", "metal")
+    with pytest.raises(ValueError, match="impl"):
+        ops.quantize(x, -4.0, 4.0)
+    with pytest.raises(ValueError, match="impl"):
+        ops.dequantize(q_env, -4.0, 4.0)
+    # explicit interpret routes to Pallas regardless of the env var
+    q_int = ops.quantize(x, -4.0, 4.0, interpret=True)
+    np.testing.assert_array_equal(np.asarray(q_env), np.asarray(q_int))
+
+
+# ------------------------------------------ fused int8 flat trunk (PR 10)
+# serve-small dispatch kernel: dequantize every layer's int8 weight codes
+# in-register and run the whole tanh MLP in one fused pass, raced against
+# the dequantize-then-matmul oracle.
+
+def _trunk_layers(key, dims=(19, 64, 64, 13), bits=8):
+    """Random quantized trunk: per-layer min-max int8 codes + f32 biases
+    (the ``rl.distill.quantize_flat_trunk`` layout) and the dequantized
+    f32 weights the oracle path sees."""
+    qlayers = []
+    for i, (d_in, d_out) in enumerate(zip(dims, dims[1:])):
+        kw, kb, key = jax.random.split(key, 3)
+        w = jax.random.normal(kw, (d_in, d_out)) * 0.4
+        mn, mx = float(w.min()), float(w.max())
+        qlayers.append({"codes": ref.quantize_ref(w, mn, mx, bits=bits),
+                        "mn": jnp.float32(mn), "mx": jnp.float32(mx),
+                        "b": jax.random.normal(kb, (d_out,)) * 0.1})
+    return qlayers
+
+
+def _trunk_ref(x, qlayers, bits=8):
+    return ref.flat_trunk_ref(
+        x, tuple(l["codes"] for l in qlayers),
+        tuple(l["mn"] for l in qlayers), tuple(l["mx"] for l in qlayers),
+        tuple(l["b"] for l in qlayers), bits=bits)
+
+
+@pytest.mark.parametrize("shape", [(1, 19), (7, 19), (4, 8, 19), (600, 19)])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_flat_trunk_matches_ref(shape, impl):
+    """Fused trunk == naive oracle over batch shapes: batch 1 (the
+    dispatch hot path), leading-dim flattening, and 600 rows exercising
+    the ragged final Pallas block (block_n 512)."""
+    qlayers = _trunk_layers(jax.random.PRNGKey(sum(shape)))
+    x = jax.random.normal(jax.random.PRNGKey(1), shape)
+    out = ops.flat_trunk(x, qlayers, impl=impl, interpret=True)
+    exp = _trunk_ref(x.reshape(-1, shape[-1]), qlayers)
+    assert out.shape == shape[:-1] + (13,)
+    np.testing.assert_allclose(np.asarray(out).reshape(-1, 13),
+                               np.asarray(exp), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_flat_trunk_dtype_grid(dtype, impl):
+    """bf16 feature rows accumulate in f32 inside both impls: parity vs
+    the oracle fed the identical rounded inputs, f32 head columns out."""
+    qlayers = _trunk_layers(jax.random.PRNGKey(2), bits=8)
+    x = (jax.random.normal(jax.random.PRNGKey(3), (33, 19)) * 2).astype(dtype)
+    out = ops.flat_trunk(x, qlayers, impl=impl, interpret=True)
+    exp = _trunk_ref(x, qlayers)
+    assert out.dtype == jnp.float32
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=tol, atol=tol)
+
+
+def test_flat_trunk_impl_env_var(monkeypatch):
+    qlayers = _trunk_layers(jax.random.PRNGKey(4))
+    x = jax.random.normal(jax.random.PRNGKey(5), (6, 19))
+    monkeypatch.setenv("REPRO_FLAT_TRUNK_IMPL", "xla")
+    np.testing.assert_allclose(
+        np.asarray(ops.flat_trunk(x, qlayers)),
+        np.asarray(ops.flat_trunk(x, qlayers, impl="xla")),
+        rtol=0, atol=0)
+    monkeypatch.setenv("REPRO_FLAT_TRUNK_IMPL", "cuda")
+    with pytest.raises(ValueError, match="impl"):
+        ops.flat_trunk(x, qlayers)
